@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: executes every paper-figure/table benchmark plus the
+query-level and roofline benchmarks, prints CSV, and validates the derived
+quantities against the expected (paper-anchored) bounds."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_figures, paper_queries, tpu_roofline
+
+    modules = [paper_figures, paper_queries, tpu_roofline]
+    failures = []
+    print("name,us_per_call,derived")
+    for mod in modules:
+        expect = getattr(mod, "EXPECT", {})
+        for fn in mod.ALL:
+            try:
+                rows = fn()
+            except Exception as e:  # noqa: BLE001
+                failures.append((fn.__name__, repr(e)))
+                print(f"{fn.__name__},ERROR,{e!r}")
+                continue
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived:.6g}")
+                if name in expect:
+                    lo, hi = expect[name]
+                    if not (lo <= derived <= hi):
+                        failures.append((name, f"{derived} not in "
+                                               f"[{lo}, {hi}]"))
+    if failures:
+        print("\nBOUND FAILURES:", file=sys.stderr)
+        for name, msg in failures:
+            print(f"  {name}: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all expected bounds satisfied")
+
+
+if __name__ == "__main__":
+    main()

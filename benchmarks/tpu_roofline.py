@@ -1,0 +1,56 @@
+"""Roofline benchmark: reads the dry-run artifacts (artifacts/dryrun/) and
+reports per-cell roofline terms + the roofline fraction of the dominant
+term against MODEL_FLOPS (EXPERIMENTS.md §Roofline feeds from the same
+artifacts). Re-derivation only — lowering happens in repro.launch.dryrun."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import pricing
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    cells = []
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "ok" and not rec.get("tag"):
+            cells.append(rec)
+    return cells
+
+
+def mfu_upper_bound(rec: dict) -> float:
+    """Achievable-MFU upper bound implied by the three-term roofline:
+    MODEL_FLOPS runtime at peak / roofline-limited runtime."""
+    r = rec["roofline"]
+    limit = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    ideal = r["model_flops"] / rec["chips"] / pricing.TPU_V5E_PEAK_BF16_FLOPS
+    return ideal / limit if limit else 0.0
+
+
+def rows() -> list[tuple]:
+    t0 = time.perf_counter()
+    cells = load_cells()
+    us = (time.perf_counter() - t0) * 1e6
+    out = []
+    for rec in cells:
+        r = rec["roofline"]
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        out.append((f"{name}/bottleneck_s", us,
+                    max(r["compute_s"], r["memory_s"], r["collective_s"])))
+        out.append((f"{name}/mfu_bound", us, mfu_upper_bound(rec)))
+    if cells:
+        worst = min(cells, key=mfu_upper_bound)
+        out.append(("roofline/cells_analyzed", us, float(len(cells))))
+        out.append((f"roofline/worst_cell_mfu", us, mfu_upper_bound(worst)))
+    return out
+
+
+EXPECT = {
+    "roofline/cells_analyzed": (30, 34),
+}
+
+ALL = [rows]

@@ -1,0 +1,3 @@
+from repro.configs.base import (SHAPES, ArchConfig, MoEConfig,  # noqa: F401
+                                RecurrentConfig, ShapeConfig,
+                                shape_applicable)

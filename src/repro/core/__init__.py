@@ -1,0 +1,16 @@
+"""Core library: the paper's contribution as composable components.
+
+- pricing:            AWS + TPU price catalogs and cost calculators (T1, T2)
+- token_bucket:       burstable-network model + transfer planning (Figs 5-7)
+- storage_service:    storage perf models + metered ObjectStore (Figs 8-10)
+- partition_scaling:  S3 prefix IOPS warm/cool model (Figs 11-13)
+- breakeven:          FaaS/IaaS + storage-tier break-even analysis (T6-T8)
+- elastic_pool:       FaaS/IaaS worker pools with cold/warm starts
+- scheduler:          stage-wise DAG scheduler with straggler mitigation
+- burst_planner:      burst-aware scan + warm-aware shuffle planning (4.5)
+- variability:        MR/CoV metrics and regional profiles (T5)
+- simulation:         discrete-event clock driving the calibrated models
+"""
+from repro.core import (breakeven, burst_planner, elastic_pool,  # noqa: F401
+                        partition_scaling, pricing, scheduler, simulation,
+                        storage_service, token_bucket, variability)

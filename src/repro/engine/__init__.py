@@ -1,0 +1,6 @@
+"""Skyrise serverless query engine (paper §3.2): a shared-storage engine
+whose coordinator and workers are stateless tasks communicating only
+through the object store, runnable in 'elastic' (FaaS) or 'provisioned'
+(IaaS) mode with identical physical plans."""
+from repro.engine import (columnar, coordinator, datagen,  # noqa: F401
+                          operators, plans, queries, worker)

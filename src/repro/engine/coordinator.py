@@ -1,0 +1,213 @@
+"""Query coordinator (paper §3.2 + Fig 4).
+
+The coordinator fetches input metadata, compiles the physical plan into a
+distributed plan (fragments per pipeline, burst-aware partition assignment
+via ``core.burst_planner``), schedules pipelines stage-wise through
+``core.scheduler`` on either the elastic (FaaS) or provisioned (IaaS) pool,
+and returns the result location plus runtime and cost — the same plan runs
+in both modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core import burst_planner, pricing, token_bucket
+from repro.core.elastic_pool import ColdStartModel, ElasticPool, ProvisionedPool
+from repro.core.scheduler import Fragment, Stage, StageScheduler, StragglerPolicy
+from repro.core.storage_service import ObjectStore, RequestStats
+from repro.engine import columnar, worker
+from repro.engine.columnar import ColumnBatch
+from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
+                                ShuffleInput, ShuffleOutput, TableInput)
+
+# Paper worker sizing: 4 vCPUs, 7,076 MiB RAM.
+WORKER_VCPUS = 4
+WORKER_MEM_GIB = 7076.0 / 1024.0
+CPU_BYTES_PER_S = 600e6 * WORKER_VCPUS / 4   # scan+decode throughput
+IO_THREADS = 32
+S3_READ_MEDIAN_S = 0.027
+S3_WRITE_MEDIAN_S = 0.040
+
+
+@dataclasses.dataclass
+class QueryResult:
+    name: str
+    result: ColumnBatch
+    runtime_s: float
+    cumulated_worker_s: float
+    faas_cost_usd: float
+    storage_cost_usd: float
+    stage_metrics: dict[str, dict]
+    request_stats: RequestStats
+    peak_workers: int
+    stage_node_seconds: list[tuple[int, float]]
+
+
+class Coordinator:
+    def __init__(self, store: ObjectStore, mode: str = "elastic",
+                 provisioned_slots: int = 256,
+                 burst_aware: bool = True,
+                 max_workers: int = 1024,
+                 preboot: bool = True,
+                 rng_seed: int = 0):
+        if mode not in ("elastic", "provisioned"):
+            raise ValueError(mode)
+        self.store = store
+        self.mode = mode
+        self.burst_aware = burst_aware
+        self.max_workers = max_workers
+        if mode == "elastic":
+            self.pool = ElasticPool(rng_seed=rng_seed)
+            self.bucket = token_bucket.LAMBDA_INBOUND
+        else:
+            # Paper Table 6: "the VMs are started before the experiment".
+            self.pool = ProvisionedPool(provisioned_slots,
+                                        boot_s=0.0 if preboot else 45.0)
+            self.bucket = token_bucket.ec2_bucket(
+                pricing.EC2_CATALOG["c6g.xlarge"])
+        self.scheduler = StageScheduler(self.pool, StragglerPolicy(),
+                                        rng_seed=rng_seed)
+        self.table_keys: dict[str, list[str]] = {}
+        self._shuffle_spec: dict[str, int] = {}
+
+    def register_table(self, name: str, keys: list[str]) -> None:
+        self.table_keys[name] = keys
+
+    # ------------------------------------------------------------------
+    def execute(self, plan: QueryPlan, query_id: Optional[str] = None
+                ) -> QueryResult:
+        query_id = query_id or plan.name
+        stats_before = dataclasses.replace(self.store.stats)
+        stages, frag_counts = self._compile(plan, query_id)
+        results = self.scheduler.run(stages)
+
+        # Merge collected fragments of the terminal pipeline.
+        terminal = plan.pipelines[-1]
+        merged = self._merge_collect(query_id, terminal,
+                                     frag_counts[terminal.name])
+
+        runtime = max(r.end_t for r in results.values())
+        node_seconds = sum(r.node_seconds for r in results.values())
+        stage_nodes = [(r.worker_count, r.node_seconds)
+                       for r in results.values()]
+        invocations = sum(r.worker_count for r in results.values())
+        faas_cost = pricing.lambda_cost(
+            WORKER_MEM_GIB, node_seconds / max(invocations, 1),
+            invocations=invocations)
+        # Coordinator function lifetime spans the query.
+        faas_cost += pricing.lambda_cost(WORKER_MEM_GIB, runtime)
+
+        stats = dataclasses.replace(self.store.stats)
+        delta = RequestStats(**{
+            f.name: getattr(stats, f.name) - getattr(stats_before, f.name)
+            for f in dataclasses.fields(RequestStats)})
+        return QueryResult(
+            name=plan.name, result=merged, runtime_s=runtime,
+            cumulated_worker_s=node_seconds, faas_cost_usd=faas_cost,
+            storage_cost_usd=delta.cost(), stage_metrics={
+                n: {"start": r.start_t, "end": r.end_t,
+                    "workers": r.worker_count, "retried": r.retried_fragments}
+                for n, r in results.items()},
+            request_stats=delta, peak_workers=max(
+                r.worker_count for r in results.values()),
+            stage_node_seconds=stage_nodes)
+
+    # ------------------------------------------------------------------
+    def _compile(self, plan: QueryPlan, query_id: str
+                 ) -> tuple[list[Stage], dict[str, int]]:
+        frag_counts: dict[str, int] = {}
+        stages: list[Stage] = []
+        for pipe in plan.pipelines:
+            n_frags, assignments = self._parallelism(pipe, frag_counts,
+                                                     query_id)
+            frag_counts[pipe.name] = n_frags
+            fragments = []
+            for i in range(n_frags):
+                spec = self._fragment_spec(plan, pipe, query_id, i,
+                                           assignments, frag_counts)
+                est, in_bytes = self._estimate(spec)
+                fragments.append(Fragment(
+                    fragment_id=i,
+                    work=lambda s=spec: worker.execute_fragment(self.store, s),
+                    est_duration_s=est, input_bytes=in_bytes))
+            stages.append(Stage(pipe.name, fragments, deps=pipe.deps()))
+        return stages, frag_counts
+
+    def _parallelism(self, pipe: Pipeline, frag_counts: dict[str, int],
+                     query_id: str) -> tuple[int, list[list[str]]]:
+        if isinstance(pipe.input, TableInput):
+            keys = self.table_keys[pipe.input.table]
+            part_bytes = float(np.mean([self.store.size(k) for k in keys])) \
+                if keys else 1.0
+            if pipe.fragments:
+                n = min(pipe.fragments, len(keys))
+            elif self.burst_aware:
+                # Paper Fig 14: keep each worker's scan inside its burst.
+                sp = burst_planner.plan_scan(part_bytes * len(keys),
+                                             part_bytes, self.max_workers,
+                                             bucket=self.bucket)
+                n = sp.workers
+            else:
+                n = max(1, math.ceil(len(keys) / 4))
+            n = max(1, min(n, len(keys)))
+            bounds = np.linspace(0, len(keys), n + 1).astype(int)
+            return n, [keys[bounds[i]:bounds[i + 1]] for i in range(n)]
+        # Shuffle consumer: parallelism = upstream shuffle partition count
+        # (readers must align with the writers' partitioning).
+        src = pipe.input.from_pipeline
+        return self._shuffle_spec[src], []
+
+    def _fragment_spec(self, plan: QueryPlan, pipe: Pipeline, query_id: str,
+                       i: int, assignments: list[list[str]],
+                       frag_counts: dict[str, int]) -> worker.FragmentSpec:
+        if isinstance(pipe.input, TableInput):
+            read_keys = assignments[i]
+            columns = pipe.input.columns
+        else:
+            src = pipe.input.from_pipeline
+            read_keys = [worker.shuffle_key(query_id, src, w, i)
+                         for w in range(frag_counts[src])]
+            columns = None
+        read_keys2: list[str] = []
+        if pipe.input2 is not None:
+            src2 = pipe.input2.from_pipeline
+            read_keys2 = [worker.shuffle_key(query_id, src2, w, i)
+                          for w in range(frag_counts[src2])]
+        if isinstance(pipe.output, ShuffleOutput):
+            self._shuffle_spec[pipe.name] = pipe.output.partitions
+            output = {"type": "shuffle",
+                      "partition_by": pipe.output.partition_by,
+                      "partitions": pipe.output.partitions}
+        else:
+            output = {"type": "collect"}
+        return worker.FragmentSpec(
+            query_id=query_id, pipeline=pipe.name, fragment=i,
+            read_keys=read_keys, read_keys2=read_keys2, columns=columns,
+            ops=pipe.ops, join=pipe.join, output=output)
+
+    def _estimate(self, spec: worker.FragmentSpec) -> tuple[float, float]:
+        """Model-time duration of a fragment: burst-limited network transfer
+        + request latencies (threaded) + CPU scan throughput."""
+        in_bytes = 0
+        for k in spec.read_keys + spec.read_keys2:
+            try:
+                in_bytes += self.store.size(k)
+            except KeyError:
+                pass  # shuffle object not yet written; sized at runtime
+        reads = len(spec.read_keys) + len(spec.read_keys2)
+        net = token_bucket.transfer_time(float(in_bytes), self.bucket)
+        req = reads * S3_READ_MEDIAN_S / IO_THREADS + S3_WRITE_MEDIAN_S
+        cpu = 2.0 * in_bytes / CPU_BYTES_PER_S  # ~2x decompression expansion
+        return net + req + cpu + 0.02, float(in_bytes)
+
+    def _merge_collect(self, query_id: str, pipe: Pipeline, n_frags: int
+                       ) -> ColumnBatch:
+        batches = []
+        for i in range(n_frags):
+            data = self.store.get(worker.result_key(query_id, pipe.name, i))
+            batches.append(columnar.deserialize(data))
+        return ColumnBatch.concat(batches)

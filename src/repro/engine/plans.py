@@ -1,0 +1,99 @@
+"""Physical query plans: JSON-able pipelines with dependencies (paper §3.2).
+
+A plan is a list of pipelines; each pipeline reads either base-table
+partitions or the shuffle output of upstream pipelines, applies a chain of
+vectorized operators (optionally after an equi-join of two shuffle inputs),
+and either reshuffles or collects its output. The coordinator decides
+fragment counts (data parallelism) per pipeline at compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+
+@dataclasses.dataclass
+class TableInput:
+    table: str
+    columns: list[str]
+    type: str = "table"
+
+
+@dataclasses.dataclass
+class ShuffleInput:
+    from_pipeline: str
+    type: str = "shuffle"
+
+
+@dataclasses.dataclass
+class ShuffleOutput:
+    partition_by: str
+    partitions: int
+    type: str = "shuffle"
+
+
+@dataclasses.dataclass
+class CollectOutput:
+    type: str = "collect"
+
+
+@dataclasses.dataclass
+class Pipeline:
+    name: str
+    input: object                       # TableInput | ShuffleInput
+    ops: list[dict]
+    output: object                      # ShuffleOutput | CollectOutput
+    input2: Optional[ShuffleInput] = None
+    join: Optional[dict] = None         # {left_key, right_key}
+    fragments: Optional[int] = None     # fixed parallelism (else coordinator)
+
+    def deps(self) -> list[str]:
+        out = []
+        for inp in (self.input, self.input2):
+            if isinstance(inp, ShuffleInput):
+                out.append(inp.from_pipeline)
+        return out
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    name: str
+    pipelines: list[Pipeline]
+
+    def to_json(self) -> str:
+        def default(o):
+            if dataclasses.is_dataclass(o):
+                return dataclasses.asdict(o)
+            import numpy as np
+            if isinstance(o, np.ndarray):
+                return o.tolist()
+            if isinstance(o, (np.integer,)):
+                return int(o)
+            if isinstance(o, (np.floating,)):
+                return float(o)
+            raise TypeError(type(o))
+        return json.dumps(dataclasses.asdict(self), default=default)
+
+    @staticmethod
+    def from_json(text: str) -> "QueryPlan":
+        raw = json.loads(text)
+        pipelines = []
+        for p in raw["pipelines"]:
+            inp = _input_from(p["input"])
+            inp2 = _input_from(p["input2"]) if p.get("input2") else None
+            if p["output"]["type"] == "shuffle":
+                out = ShuffleOutput(p["output"]["partition_by"],
+                                    p["output"]["partitions"])
+            else:
+                out = CollectOutput()
+            pipelines.append(Pipeline(p["name"], inp, p["ops"], out,
+                                      input2=inp2, join=p.get("join"),
+                                      fragments=p.get("fragments")))
+        return QueryPlan(raw["name"], pipelines)
+
+
+def _input_from(raw: dict):
+    if raw["type"] == "table":
+        return TableInput(raw["table"], raw["columns"])
+    return ShuffleInput(raw["from_pipeline"])

@@ -1,0 +1,268 @@
+"""The paper's query suite: TPC-H Q1, Q6, Q12 and TPCx-BB Q3 (§3.1).
+
+I/O-heavy queries chosen by the paper to expose resource behaviour: Q1/Q6
+select-project-aggregate, Q12 and Q3 join with broad operator sets
+including UDFs. Each builder returns a (QueryPlan, finalize) pair, plus a
+pure-numpy reference implementation for correctness tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine import datagen
+from repro.engine.columnar import ColumnBatch
+from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
+                                ShuffleInput, ShuffleOutput, TableInput)
+
+# dictionary codes (columnar.DICTIONARIES)
+MAIL, SHIP = 2, 5
+URGENT, HIGH = 0, 1
+VIEW, PURCHASE = 0, 2
+
+
+# ---------------------------------------------------------------------------
+# TPC-H Q6 — scan-heavy filter + global aggregate
+# ---------------------------------------------------------------------------
+
+def q6_plan(shipdate_lo: int = datagen.DATE_1994_01_01,
+            discount: float = 0.06, quantity: float = 24.0) -> QueryPlan:
+    pred = ["and",
+            ["ge", "l_shipdate", shipdate_lo],
+            ["lt", "l_shipdate", shipdate_lo + 365],
+            ["between", "l_discount", round(discount - 0.01, 2),
+             round(discount + 0.01, 2)],
+            ["lt", "l_quantity", quantity]]
+    scan = Pipeline(
+        name="scan_lineitem",
+        input=TableInput("lineitem", ["l_shipdate", "l_discount",
+                                      "l_quantity", "l_extendedprice"]),
+        ops=[{"op": "filter", "expr": pred},
+             {"op": "project",
+              "columns": [["revenue", ["mul", "l_extendedprice",
+                                       "l_discount"]]]},
+             {"op": "hash_agg", "keys": [],
+              "aggs": [["revenue", "sum", "revenue"]]}],
+        output=CollectOutput())
+    final = Pipeline(
+        name="final_agg",
+        input=ShuffleInput("scan_lineitem"),
+        ops=[{"op": "hash_agg", "keys": [],
+              "aggs": [["revenue", "sum", "revenue"]]}],
+        output=CollectOutput())
+    # scan collects partials; final reads collected results: model as a
+    # 1-partition shuffle for uniformity.
+    scan.output = ShuffleOutput(partition_by="__zero__", partitions=1)
+    scan.ops.append({"op": "project",
+                     "columns": ["revenue",
+                                 ["__zero__", ["const", 0]]]})
+    return QueryPlan("tpch_q6", [scan, final])
+
+
+def q6_reference(lineitem: ColumnBatch,
+                 shipdate_lo: int = datagen.DATE_1994_01_01,
+                 discount: float = 0.06, quantity: float = 24.0) -> float:
+    m = ((lineitem["l_shipdate"] >= shipdate_lo)
+         & (lineitem["l_shipdate"] < shipdate_lo + 365)
+         & (lineitem["l_discount"] >= round(discount - 0.01, 2))
+         & (lineitem["l_discount"] <= round(discount + 0.01, 2))
+         & (lineitem["l_quantity"] < quantity))
+    return float(np.sum(lineitem["l_extendedprice"][m]
+                        * lineitem["l_discount"][m]))
+
+
+# ---------------------------------------------------------------------------
+# TPC-H Q1 — scan-heavy grouped aggregation
+# ---------------------------------------------------------------------------
+
+_Q1_AGGS = [["sum_qty", "sum", "l_quantity"],
+            ["sum_base_price", "sum", "l_extendedprice"],
+            ["sum_disc_price", "sum", "disc_price"],
+            ["sum_charge", "sum", "charge"],
+            ["sum_disc", "sum", "l_discount"],
+            ["count_order", "count", "l_quantity"]]
+
+
+def q1_plan(delta_days: int = 90) -> QueryPlan:
+    cutoff = datagen.DATE_MAX - delta_days
+    scan = Pipeline(
+        name="scan_lineitem",
+        input=TableInput("lineitem", ["l_shipdate", "l_quantity",
+                                      "l_extendedprice", "l_discount",
+                                      "l_tax", "l_returnflag",
+                                      "l_linestatus"]),
+        ops=[{"op": "filter", "expr": ["le", "l_shipdate", cutoff]},
+             {"op": "project", "columns": [
+                 "l_returnflag", "l_linestatus", "l_quantity",
+                 "l_extendedprice", "l_discount",
+                 ["disc_price", ["mul", "l_extendedprice",
+                                 ["sub1", "l_discount"]]],
+                 ["charge", ["mul", ["mul", "l_extendedprice",
+                                     ["sub1", "l_discount"]],
+                             ["add1", "l_tax"]]]]},
+             {"op": "hash_agg", "keys": ["l_returnflag", "l_linestatus"],
+              "aggs": _Q1_AGGS}],
+        output=ShuffleOutput(partition_by="l_returnflag", partitions=1))
+    final_aggs = [[name, "sum" if fn != "count" else "sum", name]
+                  for name, fn, _ in _Q1_AGGS]
+    final = Pipeline(
+        name="final_agg",
+        input=ShuffleInput("scan_lineitem"),
+        ops=[{"op": "hash_agg", "keys": ["l_returnflag", "l_linestatus"],
+              "aggs": final_aggs}],
+        output=CollectOutput())
+    return QueryPlan("tpch_q1", [scan, final])
+
+
+def q1_reference(lineitem: ColumnBatch, delta_days: int = 90) -> ColumnBatch:
+    cutoff = datagen.DATE_MAX - delta_days
+    m = lineitem["l_shipdate"] <= cutoff
+    li = lineitem.select(m)
+    disc_price = li["l_extendedprice"] * (1 - li["l_discount"])
+    charge = disc_price * (1 + li["l_tax"])
+    keys = li["l_returnflag"].astype(np.int64) * 2 \
+        + li["l_linestatus"].astype(np.int64)
+    uniq, inv = np.unique(keys, return_inverse=True)
+    def agg(x):
+        return np.bincount(inv, weights=x, minlength=len(uniq))
+    return ColumnBatch({
+        "l_returnflag": (uniq // 2).astype(np.int8),
+        "l_linestatus": (uniq % 2).astype(np.int8),
+        "sum_qty": agg(li["l_quantity"]),
+        "sum_base_price": agg(li["l_extendedprice"]),
+        "sum_disc_price": agg(disc_price),
+        "sum_charge": agg(charge),
+        "sum_disc": agg(li["l_discount"]),
+        "count_order": np.bincount(inv, minlength=len(uniq)),
+    })
+
+
+# ---------------------------------------------------------------------------
+# TPC-H Q12 — join + grouped conditional aggregation (shuffle-heavy)
+# ---------------------------------------------------------------------------
+
+def q12_plan(shuffle_partitions: int = 8,
+             year_lo: int = datagen.DATE_1994_01_01) -> QueryPlan:
+    li_scan = Pipeline(
+        name="scan_lineitem",
+        input=TableInput("lineitem", ["l_orderkey", "l_shipmode",
+                                      "l_shipdate", "l_commitdate",
+                                      "l_receiptdate"]),
+        ops=[{"op": "filter", "expr": ["and",
+              ["in", "l_shipmode", [MAIL, SHIP]],
+              ["ltcol", "l_commitdate", "l_receiptdate"],
+              ["ltcol", "l_shipdate", "l_commitdate"],
+              ["ge", "l_receiptdate", year_lo],
+              ["lt", "l_receiptdate", year_lo + 365]]},
+             {"op": "project", "columns": ["l_orderkey", "l_shipmode"]}],
+        output=ShuffleOutput(partition_by="l_orderkey",
+                             partitions=shuffle_partitions))
+    o_scan = Pipeline(
+        name="scan_orders",
+        input=TableInput("orders", ["o_orderkey", "o_orderpriority"]),
+        ops=[{"op": "project", "columns": ["o_orderkey", "o_orderpriority"]}],
+        output=ShuffleOutput(partition_by="o_orderkey",
+                             partitions=shuffle_partitions))
+    join = Pipeline(
+        name="join_agg",
+        input=ShuffleInput("scan_lineitem"),
+        input2=ShuffleInput("scan_orders"),
+        join={"left_key": "l_orderkey", "right_key": "o_orderkey"},
+        ops=[{"op": "project", "columns": [
+                 "l_shipmode",
+                 ["high_line", ["case_in", "o_orderpriority",
+                                [URGENT, HIGH]]],
+                 ["low_line", ["sub1", ["case_in", "o_orderpriority",
+                                        [URGENT, HIGH]]]]]},
+             {"op": "hash_agg", "keys": ["l_shipmode"],
+              "aggs": [["high_line_count", "sum", "high_line"],
+                       ["low_line_count", "sum", "low_line"]]},
+             {"op": "project", "columns": [
+                 "l_shipmode", "high_line_count", "low_line_count",
+                 ["__zero__", ["const", 0]]]}],
+        output=ShuffleOutput(partition_by="__zero__", partitions=1))
+    final = Pipeline(
+        name="final_agg",
+        input=ShuffleInput("join_agg"),
+        ops=[{"op": "hash_agg", "keys": ["l_shipmode"],
+              "aggs": [["high_line_count", "sum", "high_line_count"],
+                       ["low_line_count", "sum", "low_line_count"]]}],
+        output=CollectOutput())
+    return QueryPlan("tpch_q12", [li_scan, o_scan, join, final])
+
+
+def q12_reference(lineitem: ColumnBatch, orders: ColumnBatch,
+                  year_lo: int = datagen.DATE_1994_01_01) -> ColumnBatch:
+    m = (np.isin(lineitem["l_shipmode"], [MAIL, SHIP])
+         & (lineitem["l_commitdate"] < lineitem["l_receiptdate"])
+         & (lineitem["l_shipdate"] < lineitem["l_commitdate"])
+         & (lineitem["l_receiptdate"] >= year_lo)
+         & (lineitem["l_receiptdate"] < year_lo + 365))
+    li = lineitem.select(m)
+    omap = dict(zip(orders["o_orderkey"].tolist(),
+                    orders["o_orderpriority"].tolist()))
+    prio = np.asarray([omap.get(int(k), -1) for k in li["l_orderkey"]])
+    keep = prio >= 0
+    shipmode = li["l_shipmode"][keep]
+    high = np.isin(prio[keep], [URGENT, HIGH]).astype(np.float64)
+    uniq, inv = np.unique(shipmode, return_inverse=True)
+    return ColumnBatch({
+        "l_shipmode": uniq,
+        "high_line_count": np.bincount(inv, weights=high,
+                                       minlength=len(uniq)),
+        "low_line_count": np.bincount(inv, weights=1.0 - high,
+                                      minlength=len(uniq)),
+    })
+
+
+# ---------------------------------------------------------------------------
+# TPCx-BB Q3 — MapReduce-style UDF job over clickstreams
+# ---------------------------------------------------------------------------
+
+def bb_q3_plan(item_table_key: str, target_category: int = 3,
+               window: int = 5, shuffle_partitions: int = 8,
+               top_k: int = 10) -> QueryPlan:
+    map_pipe = Pipeline(
+        name="map_clicks",
+        input=TableInput("clickstreams", ["wcs_user_sk", "wcs_click_date_sk",
+                                          "wcs_click_time_sk", "wcs_item_sk",
+                                          "wcs_click_type"]),
+        ops=[{"op": "udf", "name": "clicks_before_purchase",
+              "kwargs": {"target_category": target_category,
+                         "window": window},
+              "broadcast": {"item_categories": {"key": item_table_key,
+                                                "column": "i_category_id"}}}],
+        output=ShuffleOutput(partition_by="viewed_item",
+                             partitions=shuffle_partitions))
+    reduce_pipe = Pipeline(
+        name="reduce_counts",
+        input=ShuffleInput("map_clicks"),
+        ops=[{"op": "hash_agg", "keys": ["viewed_item"],
+              "aggs": [["views", "sum", "n"]]}],
+        output=CollectOutput())
+    return QueryPlan("tpcxbb_q3", [map_pipe, reduce_pipe])
+
+
+def bb_q3_reference(clicks: ColumnBatch, item: ColumnBatch,
+                    target_category: int = 3, window: int = 5
+                    ) -> dict[int, int]:
+    order = np.lexsort((clicks["wcs_click_time_sk"],
+                        clicks["wcs_click_date_sk"], clicks["wcs_user_sk"]))
+    user = clicks["wcs_user_sk"][order]
+    item_sk = clicks["wcs_item_sk"][order]
+    ctype = clicks["wcs_click_type"][order]
+    cats = item["i_category_id"]
+    counts: dict[int, int] = {}
+    for p in np.flatnonzero((ctype == PURCHASE)
+                            & (cats[item_sk] == target_category)):
+        lo = max(0, p - window)
+        for j in range(lo, p):
+            if user[j] == user[p] and ctype[j] == VIEW:
+                counts[int(item_sk[j])] = counts.get(int(item_sk[j]), 0) + 1
+    return counts
+
+
+QUERY_BUILDERS = {
+    "q1": q1_plan,
+    "q6": q6_plan,
+    "q12": q12_plan,
+}

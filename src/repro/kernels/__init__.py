@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+- flash_attention: GQA/causal/sliding-window online-softmax attention
+- moe_gmm:         grouped expert matmul (MoE FFN)
+- rwkv6_scan:      chunked RWKV-6 WKV linear-attention scan
+- rglru_scan:      blocked RG-LRU linear recurrence
+"""

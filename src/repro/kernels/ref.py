@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for every Pallas kernel (and the model fallback path).
+
+Each reference is written independently of the kernels (different loop
+structure / masking construction) so kernel-vs-ref agreement is meaningful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle: GQA + causal + sliding window
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    kk = jnp.repeat(k, g, axis=2)      # (B, Skv, H, D)
+    vv = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / jnp.sqrt(
+                            jnp.asarray(d, jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul oracle
+# ---------------------------------------------------------------------------
+
+def gmm_ref(x, w):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F) per-expert matmul."""
+    return jnp.einsum("ecd,edf->ecf", x, w)
+
+
+def moe_grouped_ffn_ref(x, w_gate, w_up, w_down):
+    gate = gmm_ref(x, w_gate)
+    up = gmm_ref(x, w_up)
+    h = gate * jax.nn.sigmoid(gate) * up
+    return gmm_ref(h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 chunked WKV oracle
+# ---------------------------------------------------------------------------
+
+def rwkv6_step_ref(r, k, v, log_w, u, s0):
+    """Fully sequential single-step oracle (ground truth for both the
+    chunked reference and the kernel). All args per full sequence:
+    r/k/v/log_w: (B, S, H, K); u: (H, K); s0: (B, H, K, V fp32)."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = jnp.exp(log_w.astype(jnp.float32))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         s + u[None, :, :, None] * kv)
+        s = s * w_t[..., None] + kv
+        return s, o_t
+
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), s_fin
+
+
+def rwkv6_chunked_ref(r, k, v, log_w, u, s0, *, chunk: int = 64):
+    """Chunked evaluation with exact pairwise intra-chunk decays.
+
+    Within a chunk: o_t = r_t S_{t-1} + sum_{i<t} (r_t . k_i decayed) v_i
+    + (r_t . u . k_t) v_t; the pairwise decay tensor is exact (no q'/k'
+    factorization), making this numerically robust for any decay magnitude.
+    """
+    b, s, h, kd = r.shape
+    vd = v.shape[-1]
+    if s % chunk:
+        pad = chunk - s % chunk
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, log_w = zpad(r), zpad(k), zpad(v), zpad(log_w)
+    nc = r.shape[1] // chunk
+    rc = r.reshape(b, nc, chunk, h, kd).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, h, kd).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, vd).astype(jnp.float32)
+    lw = log_w.reshape(b, nc, chunk, h, kd).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+
+    def chunk_step(state, inp):
+        r_c, k_c, v_c, lw_c = inp                   # (B, C, H, K)
+        incl = jnp.cumsum(lw_c, axis=1)             # log prod_{j<=t}
+        excl = incl - lw_c                          # log prod_{j<t}
+        total = incl[:, -1]                         # (B, H, K)
+        # inter-chunk: r decayed by everything before t inside the chunk
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_c * jnp.exp(excl), state)
+        # intra-chunk, exact pairwise decay exp(excl_t - incl_i), i < t
+        decay = jnp.exp(excl[:, :, None] - incl[:, None, :])   # (B,C,C,H,K)
+        scores = jnp.einsum("bthk,bihk,btihk->bthi", r_c, k_c, decay)
+        scores = jnp.where(tri[None, :, None, :], scores, 0.0)
+        o_intra = jnp.einsum("bthi,bihv->bthv", scores, v_c)
+        # bonus diagonal
+        coef = jnp.einsum("bchk,hk,bchk->bch", r_c, u.astype(jnp.float32),
+                          k_c)
+        o_self = coef[..., None] * v_c
+        # state to next chunk
+        k_dec = k_c * jnp.exp(total[:, None] - incl)
+        state = state * jnp.exp(total)[..., None] \
+            + jnp.einsum("bchk,bchv->bhkv", k_dec, v_c)
+        return state, o_inter + o_intra + o_self
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lw))
+    s_fin, o = jax.lax.scan(chunk_step, s0.astype(jnp.float32), xs)
+    o = jnp.moveaxis(o, 0, 1).reshape(b, nc * chunk, h, vd)[:, :s]
+    return o.astype(r.dtype), s_fin
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear scan oracle
+# ---------------------------------------------------------------------------
+
+def rglru_scan_ref(log_a, b_in, h0):
+    """Sequential h_t = exp(log_a_t) h_{t-1} + b_t.
+    log_a, b_in: (B, S, W) fp32; h0: (B, W). Returns (h_all, h_last)."""
+    def step(h, inp):
+        la_t, b_t = inp
+        h = jnp.exp(la_t) * h + b_t
+        return h, h
+
+    xs = (jnp.moveaxis(log_a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b_in.astype(jnp.float32), 1, 0))
+    h_last, h_all = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(h_all, 0, 1), h_last

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first initialization): the dry run — and only the dry run — needs
+512 placeholder host devices to build the production meshes.
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the jit'd step (train / prefill / decode per the shape's kind),
+  3. ``.lower(**input_specs()).compile()`` — ShapeDtypeStructs only, no
+     allocation,
+  4. records memory_analysis (fits-per-device proof), cost_analysis
+     (FLOPs / bytes for the roofline), and the parsed collective schedule
+  into artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--both] [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch import hlo_analysis, inputs, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.train.optimizer import AdamWConfig
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def cell_name(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return f"{arch}__{shape}__{mesh}"
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             rules=None, act_rules=None, out_dir: Path = ARTIFACTS,
+             tag: str = "",
+             impl: str = "reference", overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if overrides:
+        over = dict(overrides)
+        if "recurrent" in over and cfg.recurrent is not None \
+                and isinstance(over["recurrent"], dict):
+            over["recurrent"] = dataclasses.replace(cfg.recurrent,
+                                                    **over["recurrent"])
+        if "moe" in over and cfg.moe is not None \
+                and isinstance(over["moe"], dict):
+            over["moe"] = dataclasses.replace(cfg.moe, **over["moe"])
+        cfg = dataclasses.replace(cfg, **over)
+    if not shape_applicable(cfg, shape):
+        return {"cell": cell_name(arch_name, shape_name, multi_pod),
+                "status": "n/a",
+                "reason": "full-attention arch; long_500k requires "
+                          "sub-quadratic attention (DESIGN.md #4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    spec = inputs.input_specs(cfg, shape)
+    if shape.kind == "train":
+        step, _ = make_train_step(cfg, mesh, AdamWConfig(), rules=rules,
+                                  impl=impl, act_rules=act_rules,
+                                  global_batch=shape.global_batch)
+        lowered = step.lower(spec["params"], spec["opt_state"], spec["batch"])
+    elif shape.kind == "prefill":
+        step, _ = make_prefill_step(cfg, mesh, cache_len=shape.seq_len,
+                                    rules=rules, impl=impl,
+                                    act_rules=act_rules,
+                                    global_batch=shape.global_batch)
+        lowered = step.lower(spec["params"], spec["batch"])
+    else:
+        step, _ = make_decode_step(cfg, mesh, shape.global_batch,
+                                   shape.seq_len, rules=rules)
+        lowered = step.lower(spec["params"], spec["tokens"], spec["caches"],
+                             spec["position"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    summary = hlo_analysis.analyze(hlo, chips)
+    mf = roofline.model_flops(cfg, shape)
+    terms = roofline.roofline_terms_from_hlo(summary, chips, mf)
+
+    record = {
+        "cell": cell_name(arch_name, shape_name, multi_pod),
+        "status": "ok",
+        "tag": tag,
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _memory_dict(mem),
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes_accessed":
+                              float(cost.get("bytes accessed", 0.0))},
+        "collectives": {"counts": summary.collective_counts,
+                        "payload_bytes": summary.collective_payload,
+                        "wire_bytes_per_device":
+                        summary.collective_wire_bytes,
+                        "while_trip_counts": summary.while_trip_counts},
+        "roofline": terms.to_dict(),
+        "roofline_kernelized": _kernelized(terms, summary, chips, mf),
+        "score_bytes_per_device": summary.score_bytes,
+        "params_total": roofline.count_params(cfg),
+        "params_active": roofline.active_params(cfg),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = cell_name(arch_name, shape_name, multi_pod) + \
+        (f"__{tag}" if tag else "") + ".json"
+    (out_dir / fname).write_text(json.dumps(record, indent=1))
+    return record
+
+
+def _kernelized(terms, summary, chips: int, mf: float) -> dict:
+    """Roofline variant with the Pallas flash-attention kernel active: the
+    materialized score-tensor HBM traffic stays in VMEM (kernels validated
+    in interpret mode; they cannot lower on the CPU dry-run backend)."""
+    from repro.core import pricing
+    mem = max(summary.hbm_bytes - summary.score_bytes, 0.0)
+    memory_s = mem / pricing.TPU_V5E_HBM_BW_GB_S
+    t = {"compute": terms.compute_s, "memory": memory_s,
+         "collective": terms.collective_s}
+    return {"memory_s": memory_s, "compute_s": terms.compute_s,
+            "collective_s": terms.collective_s,
+            "bottleneck": max(t, key=t.get)}
+
+
+def _memory_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    out["bytes_per_device"] = args + out.get("output_size_in_bytes", 0) \
+        + out.get("temp_size_in_bytes", 0) - alias
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod and multi-pod meshes")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = [False, True] if args.both else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    ok = failed = na = skipped = 0
+    for arch, shape, mp in cells:
+        name = cell_name(arch, shape, mp)
+        path = ARTIFACTS / (name + ".json")
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("status") in ("ok", "n/a"):
+                skipped += 1
+                continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp)
+            if rec["status"] == "n/a":
+                na += 1
+                ARTIFACTS.mkdir(parents=True, exist_ok=True)
+                path.write_text(json.dumps(rec, indent=1))
+                print(f"[n/a ] {name}: {rec['reason']}", flush=True)
+            else:
+                ok += 1
+                r = rec["roofline"]
+                print(f"[ ok ] {name}: compile={rec['compile_s']}s "
+                      f"mem/dev={rec['memory'].get('bytes_per_device', 0)/2**30:.2f}GiB "
+                      f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                      f"collective={r['collective_s']:.4f}s "
+                      f"bottleneck={r['bottleneck']}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            failed += 1
+            ARTIFACTS.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(
+                {"cell": name, "status": "failed", "error": repr(e),
+                 "traceback": traceback.format_exc()[-4000:]}, indent=1))
+            print(f"[FAIL] {name}: {e!r}", flush=True)
+    print(f"dryrun summary: ok={ok} n/a={na} failed={failed} "
+          f"skipped={skipped}", flush=True)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Runs the per-iteration methodology on the three selected (arch x shape)
+cells: each ITERATION entry is one hypothesis -> change; the driver
+re-lowers, re-analyses, and appends the before/after roofline terms to
+artifacts/hillclimb.json. Baselines are the untagged dry-run artifacts.
+"""
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import ARTIFACTS, run_cell
+
+OUT = Path(__file__).resolve().parents[3] / "artifacts" / "hillclimb.json"
+
+# Each entry: (cell, tag, hypothesis, kwargs for run_cell)
+ITERATIONS = [
+    # ---- deepseek-7b train_4k: collective-bound baseline (10.26s) -------
+    ("deepseek-7b", "train_4k", "blocked-attn",
+     "Reference attention materializes fp32 S^2 scores: 6.0TB of the 8.1TB "
+     "HBM traffic. Blocked (flash-style) attention keeps scores in the "
+     "tile working set: memory term should drop ~4x; collective unchanged.",
+     dict(impl="blocked")),
+    ("deepseek-7b", "train_4k", "blocked+fsdp",
+     "266GB/dev of all-reduce is Megatron row-parallel activation "
+     "reduction. A 7B model fits per-chip without TP: pure-FSDP rules "
+     "(batch over data x model, params gathered per layer) should cut "
+     "collective ~5x to the ZeRO-3 weight-gather floor (~3x13.7GB/dev).",
+     dict(impl="blocked", rules="fsdp")),
+    ("deepseek-7b", "train_4k", "blocked+fsdp+mb2",
+     "With scores gone, activations are small; halving microbatches 4->2 "
+     "halves the per-step weight re-gather traffic (gathers run per "
+     "microbatch) at ~2x activation memory.",
+     dict(impl="blocked", rules="fsdp", overrides={"microbatches": 2})),
+    ("deepseek-7b", "train_4k", "blocked+dp256",
+     "Iteration 'blocked+fsdp' REFUTED: changing only the parameter rules "
+     "left the activation TP constraints in place, so the row-parallel "
+     "all-reduces survived. Forward-debug: switch the ACTIVATION rules to "
+     "pure data parallelism (batch over data x model = 256-way, hidden "
+     "dims replicated) so XLA lowers ZeRO weight-gathers instead of "
+     "activation all-reduces. Expected: 266GB/dev of all-reduce becomes "
+     "~2x13.8GB x mb of weight all-gather -> collective ~10.3s -> ~2.5s.",
+     dict(impl="blocked", act_rules="fsdp_acts")),
+    ("deepseek-7b", "train_4k", "blocked+dp256+mb2",
+     "ZeRO gathers repeat per microbatch; mb 4->2 halves them. Activation "
+     "memory doubles but each device now holds 1-2 sequences only.",
+     dict(impl="blocked", act_rules="fsdp_acts",
+          overrides={"microbatches": 2})),
+
+    # ---- qwen3-moe-235b train_4k: memory-bound baseline (77.4s) --------
+    ("qwen3-moe-235b-a22b", "train_4k", "blocked-attn",
+     "27TB of 63TB HBM traffic is attention scores (94 layers x 1M "
+     "tokens); blocked attention removes it: memory ~77s -> ~45s.",
+     dict(impl="blocked")),
+    ("qwen3-moe-235b-a22b", "train_4k", "blocked+mb2",
+     "1.84TB/dev of all-gather is the FSDP re-gather of expert weights, "
+     "repeated per microbatch (8x). mb 8->2 divides gather traffic by 4: "
+     "collective ~72s -> ~25s; activation memory grows 4x (fits once "
+     "scores are gone).",
+     dict(impl="blocked", overrides={"microbatches": 2})),
+    ("qwen3-moe-235b-a22b", "train_4k", "blocked+mb2+cf1",
+     "capacity_factor 1.25 -> 1.0 cuts expert dispatch buffers, a2a bytes "
+     "and expert FLOPs by 20% at the cost of more dropped tokens "
+     "(quality tradeoff documented, not free).",
+     dict(impl="blocked", overrides={"microbatches": 2,
+                                     "moe": {"capacity_factor": 1.0}})),
+
+    # ---- recurrentgemma-2b prefill_32k: infeasible baseline (165GiB) ---
+    ("recurrentgemma-2b", "prefill_32k", "local-attn",
+     "The reference path materializes full 32k x 32k scores even for "
+     "window-2048 layers (6.7TB of 7.7TB traffic) and is the memory-term "
+     "driver; chunked local attention is O(S x 2W): memory 9.4s -> ~2s "
+     "and the 165GiB/dev footprint collapses.",
+     dict(impl="blocked")),
+    ("recurrentgemma-2b", "prefill_32k", "local-attn+chunked-scan",
+     "associative_scan materializes O(S x W) per level across 32k steps; "
+     "chunked scan (lax.scan over 1k-chunks) bounds the working set and "
+     "its HBM traffic.",
+     dict(impl="blocked", overrides={"recurrent": {"scan_impl": "chunked"}})),
+    ("recurrentgemma-2b", "prefill_32k", "local-attn+chunked-block",
+     "chunked-scan REFUTED for footprint (22.3GiB unchanged): the fp32 "
+     "conv/gate/scan intermediates are computed for the full 32k sequence "
+     "before the scan. Forward-debug: pipeline the WHOLE recurrent block "
+     "(conv, gates, scan, out-proj) per 1k-chunk inside one lax.scan — "
+     "live set drops to O(B x chunk x W): expect <8GiB/dev.",
+     dict(impl="blocked",
+          overrides={"recurrent": {"scan_impl": "chunked_block"}})),
+    ("deepseek-7b", "train_4k", "blocked+zero16",
+     "dp256 REFUTED catastrophically (SPMD embedding-gather full-"
+     "rematerialization: 1400s). Forward-debug: keep batch on data(16) "
+     "(the baseline embedding path) but drop TP compute — activation "
+     "rules ff/heads/kv -> None, vocab stays on model. XLA then lowers "
+     "ZeRO weight-gathers over the model axis instead of row-parallel "
+     "activation all-reduces: expect collective 10.3s -> ~4s.",
+     dict(impl="blocked", act_rules="zero16")),
+    ("deepseek-7b", "train_4k", "blocked+zero16+mb2",
+     "ZeRO gathers repeat per microbatch: mb 4->2 halves gather traffic; "
+     "activations double (4 seqs/dev with blocked attention fits).",
+     dict(impl="blocked", act_rules="zero16",
+          overrides={"microbatches": 2})),
+    ("deepseek-7b", "train_4k", "blocked+dp256v2",
+     "zero16 REFUTED: batch on data(16) only gives each chip 16x the "
+     "per-token work (compute 1.17->7.26s) — TP-free configs need the "
+     "batch across ALL 256 chips. dp256 failed only in the embedding "
+     "gather (vocab-sharded table x 256-way tokens -> SPMD full-remat). "
+     "Forward-debug: dp256 with the embed table and lm_head REPLICATED "
+     "(840 MB bf16 each, affordable) — gather lowers locally. Expect "
+     "compute back to ~1.2s, collective = ZeRO weight-gather ~13.8GB x 3 "
+     "passes x 4 mb = 165GB -> ~3.3s (vs 10.26s TP baseline).",
+     dict(impl="blocked", rules="dp256v2", act_rules="fsdp_acts")),
+    ("deepseek-7b", "train_4k", "blocked+dp256v2+mb2",
+     "Halve the per-step ZeRO gather repetitions: mb 4->2.",
+     dict(impl="blocked", rules="dp256v2", act_rules="fsdp_acts",
+          overrides={"microbatches": 2})),
+    ("qwen1.5-110b", "train_4k", "blocked+dp256+mb1",
+     "(4th cell, beyond the required three.) Baseline is memory-bound "
+     "(62.9s; 42TB of 51TB is attention scores) with TP all-reduces at "
+     "57.8s right behind — and AR volume is microbatch-invariant, so TP "
+     "has no cheap fix. Napkin math for the deepseek-winning recipe at "
+     "110B: 256-way DP + ZeRO gathers = 222GB bf16 x 3 passes = 666GB/dev "
+     "-> ~13.3s collective; blocked attention + mb1 kills scores and "
+     "layer carries (1 seq/dev); compute (~20.3s, remat-inflated) becomes "
+     "the bottleneck: expected kernelized MFU ~0.65-0.7 vs 0.08 baseline.",
+     dict(impl="blocked", rules="dp256v2", act_rules="fsdp_acts",
+          overrides={"microbatches": 1})),
+    ("recurrentgemma-2b", "prefill_32k", "local-attn-scan+chunked-block",
+     "chunked-block REFUTED for footprint too (22.3 GiB unchanged): HLO "
+     "inspection shows the residual 22 GiB is the LOCAL-ATTENTION path "
+     "materializing all 16 chunks' (B, W, 2W, H) f32 logits at once "
+     "(~10.7 GB x 2 live buffers). Forward-debug #3: lax.scan the local "
+     "attention over chunks — live set drops to one chunk: expect "
+     "~3-4 GiB/dev.",
+     dict(impl="blocked",
+          overrides={"recurrent": {"scan_impl": "chunked_block"}})),
+    ("deepseek-7b", "train_4k", "blocked+dp256+mb1",
+     "dp256v2 at mb=4 REFUTED by a divisibility constraint: each "
+     "microbatch holds 256/4 = 64 sequences, which cannot shard 256 "
+     "ways, so the 256-way batch constraint silently degraded. "
+     "Forward-debug: microbatches=1 (the full 256-sequence batch shards "
+     "exactly 256-ways; with blocked attention 1 seq/device fits in "
+     "HBM). Expect compute back to ~1.2s/dev and collective at the "
+     "ZeRO-gather floor ~13.8GB x 3 passes -> ~1s.",
+     dict(impl="blocked", rules="dp256v2", act_rules="fsdp_acts",
+          overrides={"microbatches": 1})),
+]
+
+
+FSDP_RULES = {
+    # Pure-FSDP parameter rules: everything sharded over the data axes,
+    # no tensor parallelism (7B fits per-chip activations-wise).
+    "embed": "data", "ff": "model", "heads": None, "kv_heads": None,
+    "heads_flat": None, "head_dim": None, "vocab": "model",
+    "experts": "model", "layers": None, None: None,
+}
+
+DP256V2_RULES = {
+    # ZeRO params (2D-sharded, gathered at use) with a fully REPLICATED
+    # embedding table (vocab AND embed_table unsharded) so the 256-way
+    # batch embedding gather lowers locally.
+    "embed": "data", "embed_table": None, "ff": "model", "heads": "model",
+    "kv_heads": "model", "heads_flat": "model", "head_dim": None,
+    "vocab": None, "experts": "model", "layers": None, None: None,
+}
+
+FSDP_ACT_RULES = {
+    # Pure-DP activation constraints: batch over BOTH mesh axes, hidden
+    # dims replicated — forces ZeRO weight-gather lowering, no TP.
+    "batch": ("data", "model"), "seq": None, "embed": None, "ff": None,
+    "heads": None, "kv_heads": None, "vocab": None, None: None,
+}
+
+ZERO16_ACT_RULES = {
+    # ZeRO-over-model: batch stays on data (16-way, the baseline embedding
+    # path), hidden dims unconstrained (no TP compute), vocab on model.
+    "batch": ("pod", "data"), "seq": None, "embed": None, "ff": None,
+    "heads": None, "kv_heads": None, "vocab": "model", None: None,
+}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on tag")
+    args = ap.parse_args()
+
+    results = []
+    if OUT.exists():
+        results = json.loads(OUT.read_text())
+    done = {(r["arch"], r["shape"], r["tag"]) for r in results}
+
+    for arch, shape, tag, hypothesis, kw in ITERATIONS:
+        if args.only and args.only not in tag:
+            continue
+        if (arch, shape, tag) in done:
+            print(f"[skip] {arch}/{shape}/{tag}")
+            continue
+        kw = dict(kw)
+        if kw.get("rules") == "fsdp":
+            kw["rules"] = FSDP_RULES
+        if kw.get("rules") == "dp256v2":
+            kw["rules"] = DP256V2_RULES
+        if kw.get("act_rules") == "fsdp_acts":
+            kw["act_rules"] = FSDP_ACT_RULES
+        if kw.get("act_rules") == "zero16":
+            kw["act_rules"] = ZERO16_ACT_RULES
+        base_f = ARTIFACTS / f"{arch}__{shape}__16x16.json"
+        base = json.loads(base_f.read_text())["roofline"]
+        print(f"[run ] {arch}/{shape}/{tag}", flush=True)
+        rec = run_cell(arch, shape, multi_pod=False, tag=tag, **kw)
+        after = rec["roofline"]
+        after_k = rec.get("roofline_kernelized")
+        row = {
+            "arch": arch, "shape": shape, "tag": tag,
+            "hypothesis": hypothesis,
+            "before": base, "after": after, "after_kernelized": after_k,
+            "score_bytes_after": rec.get("score_bytes_per_device"),
+            "mem_gib_before": None, "mem_gib_after":
+            rec["memory"].get("bytes_per_device", 0) / 2 ** 30,
+            "compile_s": rec["compile_s"],
+        }
+        results.append(row)
+        OUT.write_text(json.dumps(results, indent=1))
+        b = max(base["compute_s"], base["memory_s"], base["collective_s"])
+        a = max(after["compute_s"], after["memory_s"], after["collective_s"])
+        print(f"       bottleneck {b:.2f}s -> {a:.2f}s "
+              f"(compute {after['compute_s']:.2f} memory "
+              f"{after['memory_s']:.2f} collective "
+              f"{after['collective_s']:.2f})", flush=True)
+
+
+if __name__ == "__main__":
+    main()

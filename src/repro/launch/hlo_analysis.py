@@ -1,0 +1,406 @@
+"""Trip-count-aware static analysis of compiled (SPMD-partitioned) HLO.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts scanned-layer models by ~num_layers x. This module parses the
+optimized HLO text into computations + a call graph, multiplies every op by
+the product of enclosing loop trip counts (``known_trip_count`` backend
+configs, falling back to the loop-condition constant), and derives:
+
+  * dot_flops           — 2 x numel(result) x contracted dims, per device
+  * hbm_bytes           — operand+result bytes of top-level (non-fusion-
+                          body) ops: the fusion boundary approximates HBM
+                          traffic on TPU
+  * collective wire bytes per kind (ring-algorithm formulas)
+
+All quantities are per-device (the input is the per-device SPMD module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)")
+_TRIP_RE = re.compile(r'known_trip_count[":{ ]+n[": ]+"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{.*?\}\}|\[[0-9,]+\]<=\[[0-9,x*]+\])")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_ZERO_COST_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                  "constant", "after-all", "partition-id", "replica-id",
+                  "iota"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_numel(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict            # name -> type str
+    ops: list[Op]
+    symbols: dict           # name -> type str (params + op results)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw)
+        hdr = _HDR_RE.match(line)
+        if hdr:
+            params = {}
+            for pname, ptype in _PARAM_RE.findall(hdr.group(3)):
+                params[pname] = ptype.strip()
+            cur = Computation(hdr.group(2), params, [], dict(params))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        op = _parse_op(line)
+        if op is not None:
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    return comps
+
+
+def _parse_op(line: str) -> Optional[Op]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") or " = " not in s:
+        return None
+    name, rest = s.split(" = ", 1)
+    name = name.lstrip("%").strip()
+    rest = rest.strip()
+    if rest.startswith("("):          # tuple type
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest2 = rest[: i + 1], rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp + 1:].strip()
+    par = rest2.find("(")
+    if par < 0:
+        return None
+    opcode = rest2[:par].strip()
+    # operands: %names inside the first top-level parens
+    depth = 0
+    end = par
+    for i in range(par, len(rest2)):
+        depth += rest2[i] == "("
+        depth -= rest2[i] == ")"
+        if depth == 0:
+            end = i
+            break
+    operands = _OPERANDS_RE.findall(rest2[par:end + 1])
+    return Op(name, opcode, type_str, operands, s)
+
+
+# ---------------------------------------------------------------------------
+# Call graph + multipliers
+# ---------------------------------------------------------------------------
+
+def _trip_count(line: str, comps, cond_name: Optional[str]) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    # Fallback: the loop condition compares the induction var to a constant.
+    if cond_name and cond_name in comps:
+        for op in comps[cond_name].ops:
+            c = re.search(r"constant\((\d+)\)", op.line)
+            if c:
+                return int(c.group(1))
+    return 1
+
+
+def compute_multipliers(comps: dict[str, Computation],
+                        entry: str) -> dict[str, float]:
+    """computation name -> expected executions per step."""
+    mult: dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        cname = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            targets: list[tuple[str, float]] = []
+            if op.opcode == "while":
+                body = _BODY_RE.search(op.line)
+                cond = _COND_RE.search(op.line)
+                trips = _trip_count(op.line, comps,
+                                    cond.group(1) if cond else None)
+                if body:
+                    targets.append((body.group(1), m * trips))
+                if cond:
+                    targets.append((cond.group(1), m * (trips + 1)))
+            else:
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    targets.append((cm.group(1), m))
+            for tname, tm in targets:
+                if mult.get(tname, 0.0) < tm:
+                    mult[tname] = max(mult.get(tname, 0.0), tm)
+                    stack.append(tname)
+    return mult
+
+
+def _fusion_bodies(comps: dict[str, Computation]) -> set:
+    bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    bodies.add(cm.group(1))
+    return bodies
+
+
+# Ops that read only output-sized bytes from their (possibly huge) major
+# operand — scan slicing stacked layer weights must not be charged the full
+# stack per iteration.
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _op_hbm_bytes(op: Op, comp: Computation,
+                  comps: dict[str, Computation]) -> float:
+    out_b = _type_bytes(op.type_str)
+    if op.opcode in _SLICE_OPS:
+        return 2.0 * out_b
+    if op.opcode == "dynamic-update-slice":
+        upd = _type_bytes(comp.symbols.get(op.operands[1], "")) \
+            if len(op.operands) > 1 else out_b
+        return 2.0 * upd
+    if op.opcode == "scatter":
+        upd = _type_bytes(comp.symbols.get(op.operands[2], "")) \
+            if len(op.operands) > 2 else out_b
+        return 2.0 * upd
+    if op.opcode == "fusion":
+        cm = _CALLS_RE.search(op.line)
+        body = comps.get(cm.group(1)) if cm else None
+        if body is not None:
+            # In-place update fusions alias the big buffer: only the update
+            # region is written, not the whole output.
+            dus_updates = [
+                _type_bytes(body.symbols.get(bop.operands[1], ""))
+                for bop in body.ops
+                if bop.opcode == "dynamic-update-slice"
+                and len(bop.operands) > 1]
+            total = float(sum(dus_updates)) if dus_updates else out_b
+            body_params = list(body.params)
+            for i, oname in enumerate(op.operands):
+                full = _type_bytes(comp.symbols.get(oname, ""))
+                pname = body_params[i] if i < len(body_params) else None
+                total += _fusion_param_read(body, pname, full)
+            return total
+    return out_b + sum(_type_bytes(comp.symbols.get(o, ""))
+                       for o in op.operands)
+
+
+def _fusion_param_read(body: Computation, pname: Optional[str],
+                       full_bytes: float) -> float:
+    """Bytes actually read from one fusion parameter: slice-only consumers
+    read their output size, anything else reads the full operand."""
+    if pname is None:
+        return full_bytes
+    read = 0.0
+    any_consumer = False
+    for bop in body.ops:
+        if pname in bop.operands:
+            any_consumer = True
+            if bop.opcode in _SLICE_OPS:
+                read = max(read, float(_type_bytes(bop.type_str)))
+            elif bop.opcode == "dynamic-update-slice" and \
+                    bop.operands and bop.operands[0] == pname:
+                upd = _type_bytes(body.symbols.get(bop.operands[1], "")) \
+                    if len(bop.operands) > 1 else full_bytes
+                read = max(read, float(upd))
+            else:
+                return full_bytes
+    return read if any_consumer else 0.0
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    attr = m.group(1)
+    if attr.startswith("{{"):
+        first = attr[2:].split("}", 1)[0]
+        return max(1, len([x for x in first.split(",") if x.strip()]))
+    mm = re.match(r"\[([0-9,]+)\]<=", attr)
+    if mm:
+        dims = [int(x) for x in mm.group(1).split(",")]
+        return dims[-1] if len(dims) > 1 else dims[0]
+    return default
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops: float
+    hbm_bytes: float
+    collective_wire_bytes: float
+    collective_counts: dict
+    collective_payload: dict
+    while_trip_counts: list
+    # HBM traffic of materialized (Sq, Skv) attention-score intermediates —
+    # the bytes a fused flash-attention kernel keeps in VMEM. The
+    # 'kernelized' roofline variant subtracts these (EXPERIMENTS.md §Perf).
+    score_bytes: float = 0.0
+
+
+def _is_score_shape(type_str: str, min_dim: int = 1024) -> bool:
+    """Output is a materialized attention-score tensor: trailing two dims
+    are both sequence-sized (Sq x Skv)."""
+    dims = _shape_dims(type_str)
+    return len(dims) >= 2 and dims[-1] >= min_dim and dims[-2] >= min_dim
+
+
+def analyze(text: str, total_devices: int) -> HloSummary:
+    comps = parse_hlo(text)
+    entry = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw)
+        m = _HDR_RE.match(line)
+        if m and m.group(1):
+            entry = m.group(2)
+    if entry is None:
+        # fall back: computation named main-ish
+        entry = next((n for n in comps if "main" in n), None)
+    mult = compute_multipliers(comps, entry) if entry else {}
+    fusion_bodies = _fusion_bodies(comps)
+
+    dot_flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    score_bytes = 0.0
+    ccounts: dict[str, float] = {}
+    cpayload: dict[str, float] = {}
+    trips = []
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            # FLOPs: dots anywhere (incl. fusion bodies)
+            if op.opcode in ("dot", "convolution"):
+                numel = _shape_numel(op.type_str)
+                contract = 1
+                lc = _LHS_CONTRACT_RE.search(op.line)
+                if lc and op.operands:
+                    lhs_type = comp.symbols.get(op.operands[0], "")
+                    dims = _shape_dims(lhs_type)
+                    if lc.group(1):
+                        for d in lc.group(1).split(","):
+                            di = int(d)
+                            if di < len(dims):
+                                contract *= dims[di]
+                dot_flops += 2.0 * numel * contract * m
+            if op.opcode == "while":
+                cond = _COND_RE.search(op.line)
+                trips.append(_trip_count(op.line, comps,
+                                         cond.group(1) if cond else None))
+            if in_fusion:
+                continue
+            # HBM bytes: top-level ops only (fusion boundary)
+            if op.opcode not in _ZERO_COST_OPS and op.opcode != "while":
+                b = _op_hbm_bytes(op, comp, comps) * m
+                hbm += b
+                if _is_score_shape(op.type_str):
+                    score_bytes += b
+            # Collectives (count -start, skip -done)
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                if op.opcode.endswith("-start") and \
+                        op.type_str.startswith("("):
+                    # async start returns (operand, result, ...): the last
+                    # element is the destination buffer = payload.
+                    shapes = _SHAPE_RE.findall(op.type_str)
+                    nbytes = 0
+                    if shapes:
+                        dtype, dims = shapes[-1]
+                        n = 1
+                        for d in (dims.split(",") if dims else []):
+                            n *= int(d)
+                        nbytes = n * DTYPE_BYTES.get(dtype, 0)
+                else:
+                    nbytes = _type_bytes(op.type_str)
+                g = max(1, _group_size(op.line, total_devices))
+                ccounts[base] = ccounts.get(base, 0) + m
+                cpayload[base] = cpayload.get(base, 0.0) + nbytes * m
+                if base == "all-reduce":
+                    wire += 2.0 * nbytes * (g - 1) / g * m
+                elif base in ("all-gather", "all-to-all"):
+                    wire += nbytes * (g - 1) / g * m
+                elif base == "reduce-scatter":
+                    wire += nbytes * (g - 1) * m
+                elif base == "collective-permute":
+                    wire += nbytes * m
+    return HloSummary(dot_flops, hbm, wire, ccounts, cpayload, trips,
+                      score_bytes)

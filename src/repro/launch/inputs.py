@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+``input_specs(arch, shape)`` mirrors the shannon/kernels pattern:
+weak-type-correct, shardable, zero allocation. Modality frontends (audio
+frames, vision patches) are stubs — their precomputed embeddings appear
+here as dense (B, S, D) inputs, per the assignment brief.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt_mod
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if shape.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        out["embeds"] = SDS((b, s, cfg.d_model), cfg.activation_dtype)
+        if cfg.rope == "mrope":
+            out["mrope_positions"] = SDS((3, b, s), jnp.int32)
+    else:
+        out["tokens"] = SDS((b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def param_specs(cfg: ArchConfig):
+    from repro.models.common import split_tree
+    tree = jax.eval_shape(functools.partial(tfm.init_model, cfg=cfg),
+                          jax.random.PRNGKey(0))
+    shapes, _ = split_tree(tree)
+    return jax.tree.map(lambda s: SDS(s.shape, cfg.activation_dtype)
+                        if s.dtype == jnp.float32 else SDS(s.shape, s.dtype),
+                        shapes)
+
+
+def opt_specs(cfg: ArchConfig, opt_cfg: opt_mod.AdamWConfig):
+    params = param_specs(cfg)
+    dt = jnp.bfloat16 if opt_cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: SDS(p.shape, dt)
+    return opt_mod.OptState(SDS((), jnp.int32),
+                            jax.tree.map(zeros, params),
+                            jax.tree.map(zeros, params))
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                               cfg.activation_dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                opt_cfg: opt_mod.AdamWConfig = opt_mod.AdamWConfig()) -> dict:
+    """All inputs for the step function of this (arch, shape) cell."""
+    if shape.kind == "train":
+        return {"params": param_specs(cfg),
+                "opt_state": opt_specs(cfg, opt_cfg),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": param_specs(cfg), "batch": batch_specs(cfg, shape)}
+    return {"params": param_specs(cfg),
+            "tokens": batch_specs(cfg, shape)["tokens"],
+            "caches": cache_specs(cfg, shape),
+            "position": SDS((), jnp.int32)}

@@ -1,0 +1,261 @@
+"""Generate EXPERIMENTS.md from the dry-run + hillclimb artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3]
+ART = ROOT / "artifacts" / "dryrun"
+HILL = ROOT / "artifacts" / "hillclimb.json"
+OUT = ROOT / "EXPERIMENTS.md"
+
+GIB = 2 ** 30
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def load(mesh: str, tag: str = ""):
+    out = {}
+    for f in sorted(ART.glob(f"*__{mesh}{'__' + tag if tag else ''}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag", "") != tag:
+            continue
+        out[(rec.get("arch") or rec["cell"].split("__")[0],
+             rec.get("shape") or rec["cell"].split("__")[1])] = rec
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / GIB:.2f}"
+
+
+def dominant(r):
+    return max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+
+
+ADVICE = {
+    "compute_s": "raise arithmetic intensity (fuse, larger per-chip tiles) "
+                 "or add chips",
+    "memory_s": "cut HBM streaming: fused (Pallas) attention/scan kernels, "
+                "fewer remat re-reads, bf16 intermediates",
+    "collective_s": "re-shard: fewer weight re-gathers (larger microbatches "
+                    "of gathered compute), compressed or overlapped "
+                    "collectives",
+}
+
+
+def kernelized_terms(rec):
+    rk = rec.get("roofline_kernelized")
+    if rk:
+        return rk
+    r = rec["roofline"]
+    score = rec.get("score_bytes_per_device", 0.0)
+    mem = max(r["bytes_per_device"] - score, 0.0) / HBM
+    t = {"compute": r["compute_s"], "memory": mem,
+         "collective": r["collective_s"]}
+    return {"compute_s": r["compute_s"], "memory_s": mem,
+            "collective_s": r["collective_s"],
+            "bottleneck": max(t, key=t.get)}
+
+
+def mfu_bound(rec, kern=False):
+    r = rec["roofline"]
+    t = kernelized_terms(rec) if kern else r
+    limit = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    ideal = r["model_flops"] / rec["chips"] / PEAK
+    return ideal / limit if limit > 0 else float("nan")
+
+
+def main() -> None:
+    single = load("16x16")
+    multi = load("2x16x16")
+    blocked = load("16x16", "blocked")
+    hill = json.loads(HILL.read_text()) if HILL.exists() else []
+
+    L = []
+    L.append("# EXPERIMENTS\n")
+    L.append("All artifacts regenerable: `python -m repro.launch.dryrun "
+             "--all --both`, `python -m repro.launch.hillclimb`, "
+             "`python -m repro.launch.report`. Hardware constants: TPU v5e "
+             "— 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.\n")
+
+    # ----- paper validation ------------------------------------------------
+    L.append("## §Paper-validation (faithful reproduction)\n")
+    L.append("`python -m benchmarks.run` re-derives every paper figure/"
+             "table from the calibrated models and asserts the published "
+             "values (bounds in `benchmarks/*.py`, anchors in "
+             "`tests/test_core_paper_anchors.py`). Highlights (ours vs "
+             "paper):\n")
+    L.append("""\
+| artifact | ours | paper |
+|---|---|---|
+| Fig 5 burst budget / duration / baseline | 300 MiB / ~0.25 s / 75 MiB/s | 300 MiB / ~250 ms / 7.5 MiB per 100 ms |
+| Fig 11-12 IOPS scaling | 27.5K @ 26 min/$25; 50K @ 120 min/$228; 100K @ 540 min/$1094 | same (calibration anchors) |
+| Fig 13 downscaling | 5 partitions after 1 d; 2 until ~4 d; 1 after ~4.5 d | 4-5 days staged |
+| Fig 14 burst-aware scan | 1.74x per-partition speedup | "up to 53% faster" |
+| Fig 15 warm shuffle | shuffle ~3.4x, query ~1.3x | ~50% shuffle, ~20% query |
+| Table 6 Q6 | 4.87 c/query, 561 Q/h break-even | 4.87 c, 558 Q/h |
+| Table 6 Q12 | 20.6 c/query, ~182 Q/h | 21.19 c, 128 Q/h (see note) |
+| Table 7 | all 28 cells within ~35% (most <10%) | — |
+| Table 8 | 1.65/6.2/16.1 MiB; Express never | 2/7/16 MiB; Express never |
+
+Note (Table 6, Q12): break-even = peak-cluster $/h / FaaS $/query gives
+182 Q/h from the paper's own published numbers (284 x c6g.xlarge =
+$38.6/h; 21.19 c/query); the paper prints 128 Q/h — its Q12 cluster-cost
+convention is not reconstructible from the published data. Q6 reproduces
+exactly, so we report our formula's value and flag the discrepancy.
+""")
+
+    # ----- dry run ----------------------------------------------------------
+    L.append("## §Dry-run (production meshes, 512 placeholder devices)\n")
+    L.append("Every (arch x shape) cell lowered AND compiled on the "
+             "single-pod 16x16 mesh and the multi-pod 2x16x16 (512-chip) "
+             "mesh. `long_500k` is n/a-by-rule for the eight unbounded-"
+             "attention archs (DESIGN.md §4): 32 runnable cells + 8 n/a "
+             "per mesh, zero failures.\n")
+    L.append("| arch | shape | 16x16 | mem/dev GiB (baseline) | "
+             "mem/dev GiB (blocked) | 2x16x16 | mem/dev GiB |")
+    L.append("|---|---|---|---|---|---|---|")
+    keys = sorted(set(single) | set(multi))
+    for k in keys:
+        s, m = single.get(k), multi.get(k)
+        bl = blocked.get(k)
+        def cell(r):
+            if r is None:
+                return "—", ""
+            if r["status"] == "n/a":
+                return "n/a", ""
+            return ("ok", fmt_bytes(r["memory"].get("bytes_per_device", 0)))
+        cs, ms_ = cell(s)
+        cm, mm = cell(m)
+        bm = cell(bl)[1] if bl else ""
+        L.append(f"| {k[0]} | {k[1]} | {cs} | {ms_} | {bm} | {cm} | {mm} |")
+    L.append("")
+    L.append("Memory note: baseline = paper-faithful lowering with "
+             "*unfused reference attention*, which materializes fp32 "
+             "(S x S) score tensors — prefill cells blow the 16 GiB/chip "
+             "budget. The 'blocked' column re-lowers the same cell with "
+             "the flash-style blocked/local attention (and chunked RG-LRU "
+             "scan): most cells collapse to within budget (e.g. "
+             "recurrentgemma prefill 165.3 -> 4.6, qwen2-vl prefill "
+             "461 -> 28 GiB). Cells still above 16 GiB after blocking "
+             "(qwen1.5-110b/musicgen/qwen2-vl train; deepseek-7b MHA "
+             "decode) are bounded by layer-scan activation carries, "
+             "replicated-KV-head attention carries (24 heads not "
+             "divisible by 16-way TP), or the 32k MHA KV cache — all "
+             "fit on the 2x16x16 mesh, and int8 KV / head-padding are "
+             "the documented next levers. Collective schedules per cell "
+             "(op counts, payload bytes, while trip counts) are in "
+             "`artifacts/dryrun/*.json`.\n")
+
+    # ----- roofline ---------------------------------------------------------
+    L.append("## §Roofline (single-pod 16x16, per-device terms in seconds)\n")
+    L.append("compute = dot FLOPs / 197 TF; memory = HBM bytes / 819 GB/s; "
+             "collective = ring wire bytes / 50 GB/s. All three are "
+             "trip-count-aware static analyses of the compiled SPMD HLO "
+             "(`repro.launch.hlo_analysis`; XLA's own cost_analysis counts "
+             "loop bodies once and is recorded alongside). `kern. MFU` "
+             "additionally credits the validated Pallas kernels with "
+             "keeping score tensors in VMEM (their HBM traffic is tracked "
+             "per cell as `score_bytes`).\n")
+    L.append("| arch | shape | compute | memory | collective | bottleneck |"
+             " MODEL_FLOPS | useful | MFU bound | kern. MFU |")
+    L.append("|---|---|---|---|---|---|---|---|---|---|")
+    for k in keys:
+        rec = single.get(k)
+        if rec is None or rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        L.append(
+            f"| {k[0]} | {k[1]} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{dominant(r)[:-2]} | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {mfu_bound(rec):.3f} | "
+            f"{mfu_bound(rec, kern=True):.3f} |")
+    L.append("")
+    L.append("Per-cell bottleneck remedies (one sentence each): cells are "
+             "memory-bound when reference attention streams score tensors "
+             "(fix: fused attention kernels — measured in §Perf); "
+             "collective-bound train cells are dominated by row-parallel "
+             "activation all-reduce (dense TP) or FSDP expert-weight "
+             "re-gathers (MoE) — fix: resharding / fewer microbatches; "
+             "decode cells are HBM-bound on KV-cache streaming, which is "
+             "intrinsic (useful ratio ~1 means compiled compute is pure "
+             "model math).\n")
+    L.append("`useful` = MODEL_FLOPS / (HLO dot FLOPs x chips): ~0.3-0.7 "
+             "for train (remat recompute + attention FLOPs), ~1 for "
+             "decode; <0.2 flags redundancy (e.g. baseline recurrentgemma "
+             "prefill computes full 32k x 32k attention for a 2k window — "
+             "fixed in §Perf).\n")
+
+    # ----- perf -------------------------------------------------------------
+    L.append("## §Perf (hypothesis -> change -> measure -> validate)\n")
+    L.append("Three hillclimbed cells (worst roofline fraction, most "
+             "collective-bound, most paper-representative EP MoE). "
+             "Baseline = paper-faithful reproduction (reference attention, "
+             "default Megatron-style sharding); optimized = beyond-paper "
+             "changes recorded separately below. Full per-iteration JSON: "
+             "`artifacts/hillclimb.json`.\n")
+    L.append("""\
+**Headline results** (roofline-limited achievable MFU; `kern.` = with the
+validated Pallas kernels keeping attention scores in VMEM):
+
+| cell | baseline bottleneck | best bottleneck | baseline MFU (kern.) | best MFU (kern.) | winning change |
+|---|---|---|---|---|---|
+| deepseek-7b train_4k | 10.26 s collective | 6.45 s as-lowered / **2.10 s kern.** | 0.084 | 0.134 / **0.41** | 256-way DP + ZeRO gathers + mb=1 + blocked attention |
+| qwen3-moe-235b train_4k | 77.4 s memory | 73.0 s / **40.3 s kern.** | 0.036 (0.039 kern.) | 0.038 / **0.069** | blocked attention + mb 8->2 + capacity 1.0 |
+| recurrentgemma-2b prefill_32k | 9.43 s memory (165 GiB/dev: infeasible) | **2.07 s**, 4.6 GiB/dev | 0.016 | **0.071** | chunked local attention + whole-block chunk pipeline |
+| qwen1.5-110b train_4k (4th, beyond-required) | 62.9 s memory | 41.0 s / **35.1 s kern.** | 0.080 | 0.34 / **0.395** | same dp256 recipe — but 60 GiB/dev: see note |
+
+Methodology notes that mattered (all visible in the log below):
+* XLA lowering of flash-STYLE jnp attention still streams block
+  intermediates through HBM — only the Pallas kernel keeps them in VMEM;
+  the dry-run therefore reports both as-lowered and kernelized terms
+  (`score_bytes` is measured per cell, not assumed).
+* Three sharding hypotheses were refuted before the confirmed one:
+  param-rules-only FSDP (activation constraints kept TP all-reduces
+  alive), 16-way pure-DP (16x per-chip compute), and 256-way DP with a
+  sharded embedding table (SPMD full-rematerialization pathology) — the
+  fix chain was activation-rule switch -> replicated vocab tables ->
+  microbatches=1 for 256-way divisibility.
+* Expert-TP over the data axis (to kill MoE FSDP weight gathers) was
+  refuted at design time: the f-contraction psum would reduce across
+  different token shards (comment in `models/moe.py`).
+* The deepseek-winning dp256+ZeRO recipe does NOT transfer to
+  qwen1.5-110b on 16 GiB chips: collective drops 57.8 -> 35.1 s and
+  kernelized MFU reaches 0.395 (5x baseline), but the ZeRO-gather working
+  set puts the cell at 60 GiB/dev — above ~30B params per 16 GiB chip,
+  tensor parallelism remains mandatory and the TP all-reduce is the
+  price. Measured, not assumed; the 110B cell therefore ships with the
+  TP baseline as its production config.
+* Stop criterion: each cell ended after its win when remaining ideas
+  napkin-mathed below 5% of the dominant term (deepseek: collective at
+  the ZeRO floor; qwen3: gathers bounded by memory-feasible microbatch
+  count; recurrentgemma: compute/collective parity at ~2s).
+""")
+    for row in hill:
+        b, a = row["before"], row["after"]
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        aa = max(a["compute_s"], a["memory_s"], a["collective_s"])
+        verdict = "CONFIRMED" if aa < bb * 0.95 else (
+            "NEUTRAL" if aa < bb * 1.1 else "REFUTED")
+        k = row.get("after_kernelized")
+        kern = ""
+        if k:
+            kk = max(k["compute_s"], k["memory_s"], k["collective_s"])
+            kern = f" (kernelized: {kk:.2f}s)"
+        L.append(f"### {row['arch']} / {row['shape']} / `{row['tag']}` — "
+                 f"{verdict}")
+        L.append(f"*Hypothesis*: {row['hypothesis']}")
+        L.append(f"*Measured*: bottleneck {bb:.2f}s -> {aa:.2f}s{kern}; "
+                 f"terms after: compute {a['compute_s']:.2f} / memory "
+                 f"{a['memory_s']:.2f} / collective "
+                 f"{a['collective_s']:.2f}; mem/dev "
+                 f"{row['mem_gib_after']:.1f} GiB.\n")
+    OUT.write_text("\n".join(L))
+    print(f"wrote {OUT} ({len(L)} lines)")
+
+
+if __name__ == "__main__":
+    main()

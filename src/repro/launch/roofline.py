@@ -1,0 +1,176 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / peak_bf16_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = wire_bytes_per_device / ICI_link_bw
+
+``compiled.cost_analysis()`` supplies per-device FLOPs and bytes; the
+collective bytes are not in cost_analysis, so the SPMD-partitioned HLO text
+is parsed: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes ring-algorithm wire bytes computed from its
+(per-device) result shape and replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+from repro.core import pricing
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
+                       r"u64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^\n]*?\}|\[[0-9,]+\]"
+                        r"<=\[[0-9,x]+\])")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(attr: Optional[str], default: int) -> int:
+    if not attr:
+        return default
+    if attr.startswith("{{"):
+        first = attr[2:].split("}", 1)[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    m = re.match(r"\[([0-9,]+)\]<=", attr)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        # iota format [num_groups, group_size]
+        return dims[-1] if len(dims) > 1 else dims[0]
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    payload_bytes: dict       # per-device result bytes by op kind
+    wire_bytes: float         # per-device ring-algorithm wire bytes
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    payload: dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pairs: count the -start only
+        nbytes = _shape_bytes(type_str)
+        g = _group_size(_group_attr(line), total_devices)
+        g = max(g, 1)
+        counts[kind] = counts.get(kind, 0) + 1
+        payload[kind] = payload.get(kind, 0.0) + nbytes
+        if kind == "all-reduce":
+            wire += 2.0 * nbytes * (g - 1) / g
+        elif kind in ("all-gather", "all-to-all"):
+            wire += nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; input was g x larger
+            wire += nbytes * (g - 1)
+        elif kind == "collective-permute":
+            wire += nbytes
+    return CollectiveStats(counts, payload, wire)
+
+
+def _group_attr(line: str) -> Optional[str]:
+    m = _GROUPS_RE.search(line)
+    return m.group(1) if m else None
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float      # MODEL_FLOPS / (HLO_FLOPs x chips)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms_from_hlo(summary, chips: int,
+                            model_flops: float) -> Roofline:
+    """Terms from the trip-count-aware HLO analysis (hlo_analysis.analyze);
+    all inputs are per-device."""
+    flops = float(summary.dot_flops)
+    mem = float(summary.hbm_bytes)
+    wire = float(summary.collective_wire_bytes)
+    compute_s = flops / pricing.TPU_V5E_PEAK_BF16_FLOPS
+    memory_s = mem / pricing.TPU_V5E_HBM_BW_GB_S
+    collective_s = wire / pricing.TPU_V5E_ICI_LINK_GB_S
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo = flops * chips
+    ratio = model_flops / total_hlo if total_hlo else float("nan")
+    return Roofline(flops, mem, wire, compute_s, memory_s,
+                    collective_s, bottleneck, model_flops, ratio)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6ND convention; MoE uses active params)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> float:
+    from repro.launch import inputs
+    specs = inputs.param_specs(cfg)
+    import jax
+    return float(sum(math.prod(s.shape) for s in jax.tree.leaves(specs)))
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (dense: all; MoE: shared + top-k)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    mo = cfg.moe
+    per_expert = 3 * cfg.d_model * mo.expert_d_ff
+    n_moe_layers = sum(1 for k in cfg.layer_kinds() if k == "moe") \
+        - mo.first_k_dense
+    inactive = per_expert * (mo.num_experts - mo.top_k) * n_moe_layers
+    return total - inactive
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch

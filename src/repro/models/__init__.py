@@ -1,0 +1,3 @@
+"""Model zoo: segment-stacked decoders covering all assigned architecture
+families (dense GQA, fine-grained MoE, RWKV-6, RG-LRU hybrid, modality
+stubs). Entry points in repro.models.transformer."""

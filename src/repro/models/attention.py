@@ -1,0 +1,268 @@
+"""GQA attention with RoPE / M-RoPE, optional QKV bias, sliding windows,
+KV-cache prefill/decode, and a Pallas flash-attention switch.
+
+Layouts: activations (B, S, D); q/k/v (B, S, H, Dh). The KV cache for
+full attention is (B, S_max, Hkv, Dh) pairs; sliding-window layers use a
+rolling cache of size ``window`` (constant memory for long decode).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import Param, dense_init, shard, zeros_init
+
+NEG_INF = -2.3819763e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, S_cache, Hkv, Dh)
+    v: jax.Array
+    length: jax.Array       # () int32 — tokens currently in cache
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], (d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], (d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], (h, dh, d), ("heads", "head_dim", "embed"),
+                         fan_in=h * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((h, dh), ("heads", "head_dim"))
+        p["bk"] = zeros_init((hkv, dh), ("kv_heads", "head_dim"))
+        p["bv"] = zeros_init((hkv, dh), ("kv_heads", "head_dim"))
+    return p
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.rope == "rope":
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = common.apply_mrope(q, positions, cfg.mrope_sections,
+                               cfg.rope_theta)
+        k = common.apply_mrope(k, positions, cfg.mrope_sections,
+                               cfg.rope_theta)
+    q = shard(q, ("batch", "seq", "heads", None))
+    k = shard(k, ("batch", "seq", "kv_heads", None))
+    v = shard(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int = 0,
+          kv_length: Optional[jax.Array] = None,
+          q_offset: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention. q: (B,Sq,H,Dh), k/v: (B,Skv,Hkv,Dh)."""
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    groups = h // hkv
+    qg = q.reshape(b, sq, hkv, groups, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh).astype(jnp.float32)
+    q_pos = jnp.arange(sq)[:, None]
+    if q_offset is not None:
+        q_pos = q_pos + q_offset
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    if kv_length is not None:
+        mask &= k_pos < kv_length
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _flash(q, k, v, *, causal: bool, window: int = 0):
+    from repro.kernels import ops as kops
+    return kops.flash_attention(q, k, v, causal=causal, window=window)
+
+
+def _blocked_sdpa(q, k, v, *, causal: bool, window: int = 0,
+                  block_k: int = 1024) -> jax.Array:
+    """Flash-style attention in pure jnp: lax.scan over KV blocks with a
+    running (max, denom, acc) online softmax. Never materializes the
+    (Sq, Skv) score tensor — O(Sq x block_k) working set. This is the
+    XLA-lowerable stand-in for the Pallas kernel used by the dry-run
+    (kernels/flash_attention.py is the TPU production path)."""
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    block_k = min(block_k, skv)
+    assert skv % block_k == 0
+    nb = skv // block_k
+    qf = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    kb = jnp.moveaxis(k.reshape(b, nb, block_k, hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block_k, hkv, dh), 1, 0)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, ib = inp
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                            kc.astype(jnp.float32)) * scale
+        k_pos = ib * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        safe = m_new > NEG_INF / 2
+        alpha = jnp.where(safe, jnp.exp(m - m_new), 0.0)
+        p = jnp.where(safe[..., None], jnp.exp(logits - m_new[..., None]),
+                      0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = jnp.moveaxis(out, -2, 1).reshape(b, sq, h, dh)
+    return out.astype(q.dtype)
+
+
+def _local_sdpa(q, k, v, *, window: int) -> jax.Array:
+    """Sliding-window attention via chunking: queries attend within their
+    chunk and the previous chunk (exact for window <= chunk). O(S x 2W)
+    compute and memory — removes both the S^2 score tensor AND the wasted
+    masked-block compute of a full-attention lowering."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    chunk = window
+    pad = (-s) % chunk
+    if pad:
+        zq = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zq(q), zq(k), zq(v)
+    sp = q.shape[1]
+    nc = sp // chunk
+    qc = q.reshape(b, nc, chunk, hkv, g, dh).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, hkv, dh).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, hkv, dh).astype(jnp.float32)
+    # previous chunk's K/V (zeros before the first chunk)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kk = jnp.concatenate([kprev, kc], axis=2)          # (B, nc, 2W, hkv, d)
+    vv = jnp.concatenate([vprev, vc], axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qpos = jnp.arange(chunk)[:, None] + chunk          # within [W, 2W)
+    kpos = jnp.arange(2 * chunk)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    first_chunk_valid = kpos >= chunk                  # no previous chunk
+    m0 = mask & first_chunk_valid
+    full_mask = jnp.concatenate(
+        [m0[None], jnp.broadcast_to(mask[None], (nc - 1,) + mask.shape)]
+        if nc > 1 else [m0[None]], axis=0)             # (nc, W, 2W)
+
+    # Scan chunks sequentially: live set is O(B x W x 2W x H) per step
+    # instead of O(B x S x 2W x H) for the whole sequence at once.
+    def step(_, inp):
+        qi, ki, vi, mi = inp                           # (B, W, ...), (W, 2W)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qi, ki) * scale
+        logits = jnp.where(mi[None, None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        return None, jnp.einsum("bhgqk,bkhd->bqhgd", p, vi)
+
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kk, 1, 0),
+          jnp.moveaxis(vv, 1, 0), full_mask)
+    _, out = jax.lax.scan(step, None, xs)              # (nc, B, W, hkv, g, d)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sp, h, dh)[:, :s]
+    return out.astype(q.dtype)
+
+
+def attention(params, x, cfg: ArchConfig, positions, *,
+              window: int = 0, impl: str = "reference") -> jax.Array:
+    """Full-sequence (train / prefill) attention."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if impl == "flash":
+        out = _flash(q, k, v, causal=True, window=window)
+    elif impl == "blocked" and window and window <= q.shape[1]:
+        out = _local_sdpa(q, k, v, window=window)
+    elif impl == "blocked":
+        out = _blocked_sdpa(q, k, v, causal=True, window=window)
+    else:
+        out = _sdpa(q, k, v, causal=True, window=window)
+    out = shard(out, ("batch", "seq", "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def attention_prefill(params, x, cfg: ArchConfig, positions, *,
+                      cache_len: int, window: int = 0,
+                      impl: str = "reference"):
+    """Prefill: run full attention and build the KV cache."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if impl == "flash":
+        out = _flash(q, k, v, causal=True, window=window)
+    elif impl == "blocked" and window and window <= q.shape[1]:
+        out = _local_sdpa(q, k, v, window=window)
+    elif impl == "blocked":
+        out = _blocked_sdpa(q, k, v, causal=True, window=window)
+    else:
+        out = _sdpa(q, k, v, causal=True, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    b, s = x.shape[0], x.shape[1]
+    size = min(window, cache_len) if window else cache_len
+    kc = jnp.zeros((b, size) + k.shape[2:], k.dtype)
+    vc = jnp.zeros((b, size) + v.shape[2:], v.dtype)
+    if window and s > size:
+        # Rolling layout: token j lives at slot j % window, so the next
+        # decode step (slot position % window) overwrites the oldest entry.
+        slots = jnp.arange(s - size, s) % size
+        kc = kc.at[:, slots].set(k[:, -size:])
+        vc = vc.at[:, slots].set(v[:, -size:])
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k[:, :size], (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, :size], (0, 0, 0, 0))
+    length = jnp.asarray(min(s, size), jnp.int32)
+    return y, KVCache(shard(kc, ("batch", "seq", "kv_heads", None)),
+                      shard(vc, ("batch", "seq", "kv_heads", None)), length)
+
+
+def attention_decode(params, x, cfg: ArchConfig, position, cache: KVCache,
+                     *, window: int = 0):
+    """One-token decode against the cache. x: (B, 1, D); position: () int."""
+    if cfg.rope == "mrope":
+        # Decode emits text tokens: all three M-RoPE streams advance together.
+        pos = jnp.full((3, x.shape[0], 1), position, jnp.int32)
+    else:
+        pos = jnp.full((x.shape[0], 1), position, jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, pos)
+    if window:
+        slot = position % cache.k.shape[1]
+    else:
+        slot = jnp.minimum(position, cache.k.shape[1] - 1)
+    kc = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    new_len = jnp.minimum(cache.length + 1,
+                          jnp.asarray(cache.k.shape[1], jnp.int32))
+    # Rolling window caches are position-scrambled; attention over a window
+    # is permutation-invariant given the causal validity mask.
+    out = _sdpa(q, kc, vc, causal=False, kv_length=new_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, KVCache(kc, vc, new_len)

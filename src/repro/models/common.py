@@ -1,0 +1,193 @@
+"""Shared model infrastructure: parameter trees with logical sharding axes,
+norms, rotary embeddings, and the logical-axis constraint helper.
+
+Parameters are built as ``Param(value, axes)`` pairs so the init function is
+the single source of truth for both shapes and logical sharding axes;
+``split_tree`` separates them into (params, axes) pytrees with identical
+structure. Logical axes map to mesh axes via ``sharding.rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: tuple            # logical axis names, len == value.ndim
+
+
+# Registered with the value as the only child and the logical axes as static
+# treedef metadata, so Param trees pass through jit/eval_shape unchanged.
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """(params, axes) pytrees with the same structure."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, dtype=jnp.float32, scale: float = 1.0,
+               fan_in: Optional[int] = None) -> Param:
+    fan = fan_in if fan_in is not None else shape[0]
+    std = scale / np.sqrt(fan)
+    return Param(jax.random.normal(key, shape, dtype) * std, axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def embed_init(key, shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jax.random.normal(key, shape, dtype) * 0.02, axes)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding constraints
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_RULES: dict[str, Optional[str]] = {}
+_ACTIVE_MESH: list = [None]
+
+
+def set_activation_rules(rules: dict[str, Optional[str]],
+                         mesh=None) -> None:
+    """Install logical->mesh axis rules (+ the mesh) for activation
+    constraints — called by the step builders at trace time."""
+    _ACTIVATION_RULES.clear()
+    _ACTIVATION_RULES.update(rules)
+    _ACTIVE_MESH[0] = mesh
+
+
+def clear_activation_rules() -> None:
+    _ACTIVATION_RULES.clear()
+    _ACTIVE_MESH[0] = None
+
+
+def shard(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a mesh.
+
+    Mesh axes are applied only when the dim is divisible by the axis size
+    and the axis is not already used by another dim (GSPMD would otherwise
+    pad — wasteful for e.g. 4 KV heads over a 16-way model axis)."""
+    if not _ACTIVATION_RULES:
+        return x
+    mesh = _ACTIVE_MESH[0]
+    if mesh is None:
+        return x
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    spec = []
+    for dim, ax in zip(x.shape, logical_axes):
+        m = _ACTIVATION_RULES.get(ax) if ax is not None else None
+        names = m if isinstance(m, tuple) else (m,) if m else ()
+        # Drop mesh axes absent from this mesh (e.g. 'pod' on single-pod).
+        names = tuple(a for a in names if a in mesh_shape)
+        m = (names if len(names) > 1 else names[0]) if names else None
+        size = 1
+        for a in names:
+            size *= mesh_shape.get(a, 1)
+        if m is not None and size > 1 and dim % size == 0 \
+                and not (set(names) & used):
+            used |= set(names)
+            spec.append(m)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def group_norm_heads(x: jax.Array, weight: jax.Array, bias: jax.Array,
+                     num_heads: int, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm with one group per head over the channel dim (RWKV ln_x)."""
+    *lead, d = x.shape
+    xs = x.astype(jnp.float32).reshape(*lead, num_heads, d // num_heads)
+    mean = xs.mean(axis=-1, keepdims=True)
+    var = xs.var(axis=-1, keepdims=True)
+    xs = (xs - mean) * jax.lax.rsqrt(var + eps)
+    xs = xs.reshape(*lead, d)
+    return (xs * weight + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                        # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array,
+                sections: tuple[int, ...] = (16, 24, 24),
+                theta: float = 1000000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): rotary halves are split into temporal/
+    height/width sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions: (3, B, S); sections sum to D/2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                         # (D/2,)
+    # Select the position stream per frequency-section:
+    # angle[b, s, i] = positions[section(i), b, s] * freqs[i].
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=d // 2)
+    pos_all = positions.astype(jnp.float32)              # (3, B, S)
+    angles = pos_all[sec_id]                             # (D/2, B, S)
+    angles = jnp.moveaxis(angles, 0, -1) * freqs         # (B, S, D/2)
+    angles = angles[..., None, :]                        # (B, S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)

@@ -1,0 +1,24 @@
+"""SwiGLU feed-forward (llama-family default across the assigned archs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, shard, silu
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), ("embed", "ff")),
+        "w_up": dense_init(ks[1], (d_model, d_ff), ("embed", "ff")),
+        "w_down": dense_init(ks[2], (d_ff, d_model), ("ff", "embed"),
+                             fan_in=d_ff),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = shard(silu(gate) * up, ("batch", "seq", "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

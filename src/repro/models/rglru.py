@@ -1,0 +1,201 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"): two parallel branches from
+the residual stream — (linear -> temporal conv1d(w=4) -> RG-LRU) gated by
+(linear -> GeLU) — merged by an output linear.
+
+RG-LRU cell:
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The scan is a first-order linear recurrence evaluated with an associative
+scan over (a, b) pairs — O(log T) depth, TPU-friendly — or with the blocked
+``rglru_scan`` Pallas kernel. Decode carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Param, dense_init, shard, zeros_init
+
+RGLRU_C = 8.0
+
+
+class RglruState(NamedTuple):
+    h: jax.Array             # (B, W) fp32 recurrent state
+    conv: jax.Array          # (B, conv_width - 1, W) conv tail
+
+
+def init_rglru(key, cfg: ArchConfig):
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in_rnn": dense_init(ks[0], (d, w), ("embed", "ff")),
+        "w_in_gate": dense_init(ks[1], (d, w), ("embed", "ff")),
+        "conv_w": dense_init(ks[2], (cw, w), (None, "ff"), fan_in=cw),
+        "conv_b": zeros_init((w,), ("ff",)),
+        "gate_a": dense_init(ks[3], (w, w), ("ff", None)),
+        "gate_a_b": zeros_init((w,), ("ff",)),
+        "gate_x": dense_init(ks[4], (w, w), ("ff", None)),
+        "gate_x_b": zeros_init((w,), ("ff",)),
+        # Lambda init so a^c ~ U[0.9, 0.999] at r=1 (Griffin init)
+        "lam": Param(jnp.linspace(0.65, 4.6, w), ("ff",)),
+        "w_out": dense_init(ks[5], (w, d), ("ff", "embed"), fan_in=w),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x: (B, S, W); tail: (B, cw-1, W)."""
+    cw = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(cw))
+    return out + conv_b, xp[:, -(cw - 1):]
+
+
+def _gates(params, u):
+    """u: (B, S, W) conv output -> (log_a, x_in) both fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["gate_a"].astype(jnp.float32)
+                       + params["gate_a_b"])
+    i = jax.nn.sigmoid(uf @ params["gate_x"].astype(jnp.float32)
+                       + params["gate_x_b"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * uf)
+    return log_a, x_in
+
+
+def linear_scan(log_a, b, h0):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t via associative scan over time.
+
+    log_a, b: (B, S, W) fp32; h0: (B, W). Returns (h_all, h_last).
+    """
+    def combine(left, right):
+        la1, b1 = left
+        la2, b2 = right
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    b0 = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+    la_all, h_all = jax.lax.associative_scan(combine, (log_a, b0), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def linear_scan_chunked(log_a, b, h0, chunk: int = 1024):
+    """Chunked linear scan: lax.scan over chunks (carry = state only) with
+    an associative scan inside each chunk — bounds the scan's working set
+    to O(chunk x W) instead of the associative scan's O(S x W) per level,
+    matching the Pallas kernel's blocking."""
+    bsz, s, w = log_a.shape
+    pad = (-s) % chunk
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = log_a.shape[1] // chunk
+    la = jnp.moveaxis(log_a.reshape(bsz, nc, chunk, w), 1, 0)
+    bb = jnp.moveaxis(b.reshape(bsz, nc, chunk, w), 1, 0)
+
+    def step(h, inp):
+        la_c, b_c = inp
+        h_all, h_last = linear_scan(la_c, b_c, h)
+        return h_last, h_all
+
+    h_last, h_all = jax.lax.scan(step, h0.astype(jnp.float32), (la, bb))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(bsz, nc * chunk, w)[:, :s]
+    return h_all, h_last
+
+
+def rglru_block(params, x, cfg: ArchConfig,
+                state: Optional[RglruState] = None, *,
+                use_kernel: bool = False):
+    """Full-sequence recurrent block. x: (B, S, D) -> (y, new_state)."""
+    if cfg.recurrent.scan_impl == "chunked_block" and state is None:
+        return _rglru_block_chunked(params, x, cfg,
+                                    chunk=max(cfg.recurrent.chunk, 256))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in_rnn"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_in_gate"]))
+    u = shard(u, ("batch", "seq", "ff"))
+    conv_tail = state.conv if state is not None else None
+    u, new_tail = _causal_conv(u, params["conv_w"], params["conv_b"],
+                               conv_tail)
+    log_a, x_in = _gates(params, u)
+    h0 = state.h if state is not None \
+        else jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h_all, h_last = kops.rglru_scan(log_a, x_in, h0,
+                                        chunk=cfg.recurrent.chunk)
+    elif cfg.recurrent.scan_impl == "chunked":
+        h_all, h_last = linear_scan_chunked(log_a, x_in, h0,
+                                            chunk=max(cfg.recurrent.chunk,
+                                                      256))
+    else:
+        h_all, h_last = linear_scan(log_a, x_in, h0)
+    y = (h_all.astype(x.dtype) * gate) @ params["w_out"]
+    return y, RglruState(h_last, new_tail)
+
+
+def _rglru_block_chunked(params, x, cfg: ArchConfig, chunk: int):
+    """Whole-block chunk pipeline: conv, gates, scan AND the output
+    projection all run per seq-chunk inside one lax.scan, so the fp32
+    gate/scan intermediates never exist at full sequence length — the
+    live set is O(B x chunk x W) instead of O(B x S x W)."""
+    b, s, d = x.shape
+    w = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    # Padded positions must be identity updates (log_a=0, input=0) or the
+    # carried state would evolve through the padding.
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, 1, chunk, 1)
+
+    def step(carry, inp):
+        x_c, valid_c = inp
+        h, tail = carry
+        u = jnp.einsum("bsd,dw->bsw", x_c, params["w_in_rnn"])
+        gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_c,
+                                      params["w_in_gate"]))
+        u, new_tail = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                   tail)
+        log_a, x_in = _gates(params, u)
+        log_a = jnp.where(valid_c, log_a, 0.0)
+        x_in = jnp.where(valid_c, x_in, 0.0)
+        h_all, h_last = linear_scan(log_a, x_in, h)
+        y_c = (h_all.astype(x_c.dtype) * gate) @ params["w_out"]
+        return (h_last, new_tail), y_c
+
+    h0 = jnp.zeros((b, w), jnp.float32)
+    tail0 = jnp.zeros((b, cw - 1, w), x.dtype)
+    (h_last, _), yc = jax.lax.scan(step, (h0, tail0), (xc, valid))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, nc * chunk, d)[:, :s]
+    # Conv tail for decode continuation: the last cw-1 REAL inputs (the
+    # in-scan tail ends on padded positions).
+    x_tail = x[:, max(0, s - (cw - 1)):s]
+    tail = jnp.einsum("bsd,dw->bsw", x_tail, params["w_in_rnn"])
+    if tail.shape[1] < cw - 1:
+        tail = jnp.pad(tail, ((0, 0), (cw - 1 - tail.shape[1], 0), (0, 0)))
+    return y, RglruState(h_last, tail.astype(x.dtype))
+
+
+def rglru_block_decode(params, x, cfg: ArchConfig, state: RglruState):
+    """One-step decode: O(1) state. x: (B, 1, D)."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in_rnn"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_in_gate"]))
+    u, new_tail = _causal_conv(u, params["conv_w"], params["conv_b"],
+                               state.conv)
+    log_a, x_in = _gates(params, u)
+    h = jnp.exp(log_a[:, 0]) * state.h + x_in[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate) @ params["w_out"]
+    return y, RglruState(h, new_tail)

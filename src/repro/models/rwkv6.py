@@ -1,0 +1,158 @@
+"""RWKV-6 "Finch" time-mix layer (arXiv:2404.05892): data-dependent decay
+linear attention with per-head state, plus the RWKV channel-mix FFN.
+
+TPU adaptation (DESIGN.md): the recurrence is evaluated in *chunks* — within
+a chunk the contribution is a (masked) quadratic form over decay-weighted
+keys, between chunks only the (H, Dk, Dv) state is carried. This keeps the
+working set VMEM-sized and MXU-shaped instead of materializing per-step
+outer products; the chunk core is the ``rwkv6_scan`` Pallas kernel, with
+``kernels.ref.rwkv6_chunk_ref`` as the pure-jnp oracle used here.
+
+State layout for decode: (B, H, Dk, Dv) per layer + the token-shift buffer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Param, dense_init, shard, zeros_init, ones_init
+
+
+class RwkvState(NamedTuple):
+    wkv: jax.Array          # (B, H, Dk, Dv) fp32
+    x_prev_t: jax.Array     # (B, D) last input to time-mix
+    x_prev_c: jax.Array     # (B, D) last input to channel-mix
+
+
+DECAY_LORA = 64
+
+
+def init_rwkv(key, cfg: ArchConfig):
+    d = cfg.d_model
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift interpolation weights per projection
+        "mu_r": Param(jnp.full((d,), 0.5), ("embed",)),
+        "mu_k": Param(jnp.full((d,), 0.5), ("embed",)),
+        "mu_v": Param(jnp.full((d,), 0.5), ("embed",)),
+        "mu_w": Param(jnp.full((d,), 0.5), ("embed",)),
+        "mu_g": Param(jnp.full((d,), 0.5), ("embed",)),
+        "w_r": dense_init(ks[0], (d, d), ("embed", "heads_flat")),
+        "w_k": dense_init(ks[1], (d, d), ("embed", "heads_flat")),
+        "w_v": dense_init(ks[2], (d, d), ("embed", "heads_flat")),
+        "w_g": dense_init(ks[3], (d, d), ("embed", "heads_flat")),
+        "w_o": dense_init(ks[4], (d, d), ("heads_flat", "embed")),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": Param(jnp.full((d,), -5.0), ("embed",)),
+        "decay_a": dense_init(ks[5], (d, DECAY_LORA), ("embed", None)),
+        "decay_b": dense_init(ks[6], (DECAY_LORA, d), (None, "embed"),
+                              fan_in=DECAY_LORA),
+        "bonus_u": Param(jnp.zeros((h, hd)), ("heads", None)),
+        "ln_x_w": ones_init((d,), ("embed",)),
+        "ln_x_b": zeros_init((d,), ("embed",)),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "mu_k": Param(jnp.full((d,), 0.5), ("embed",)),
+        "w_in": dense_init(ks[0], (d, f), ("embed", "ff")),
+        "w_out": dense_init(ks[1], (f, d), ("ff", "embed"), fan_in=f),
+    }
+
+
+def _token_shift(x, x_prev, mu):
+    """lerp(x, shift(x), mu) — shift brings the previous token forward."""
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    return x + (shifted - x) * mu
+
+
+def _projections(params, x, x_prev, cfg: ArchConfig):
+    b, s, d = x.shape
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    xr = _token_shift(x, x_prev, params["mu_r"])
+    xk = _token_shift(x, x_prev, params["mu_k"])
+    xv = _token_shift(x, x_prev, params["mu_v"])
+    xw = _token_shift(x, x_prev, params["mu_w"])
+    xg = _token_shift(x, x_prev, params["mu_g"])
+    r = (xr @ params["w_r"]).reshape(b, s, h, hd)
+    k = (xk @ params["w_k"]).reshape(b, s, h, hd)
+    v = (xv @ params["w_v"]).reshape(b, s, h, hd)
+    g = xg @ params["w_g"]
+    # data-dependent decay, log-space: log w_t in (-inf, 0)
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["decay_a"]) \
+        @ params["decay_b"]
+    log_w = -jnp.exp(params["decay_w0"].astype(jnp.float32) + lora)
+    log_w = log_w.reshape(b, s, h, hd)
+    return r, k, v, g, log_w
+
+
+def rwkv_time_mix(params, x, cfg: ArchConfig, state: RwkvState | None = None,
+                  *, use_kernel: bool = False):
+    """Full-sequence (train/prefill) time-mix. Returns (y, new_state)."""
+    b, s, d = x.shape
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    x_prev = state.x_prev_t if state is not None \
+        else jnp.zeros((b, d), x.dtype)
+    r, k, v, g, log_w = _projections(params, x, x_prev, cfg)
+    u = params["bonus_u"].astype(jnp.float32)
+    s0 = state.wkv if state is not None \
+        else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        o, s_out = kops.rwkv6_scan(r, k, v, log_w, u, s0,
+                                   chunk=cfg.recurrent.chunk)
+    else:
+        from repro.kernels import ref as kref
+        o, s_out = kref.rwkv6_chunked_ref(r, k, v, log_w, u, s0,
+                                          chunk=cfg.recurrent.chunk)
+
+    o = o.reshape(b, s, d)
+    from repro.models.common import group_norm_heads
+    o = group_norm_heads(o, params["ln_x_w"], params["ln_x_b"], h)
+    o = o * jax.nn.silu(g)
+    y = o @ params["w_o"]
+    new_state = RwkvState(s_out, x[:, -1],
+                          state.x_prev_c if state is not None
+                          else jnp.zeros((b, d), x.dtype))
+    return y, new_state
+
+
+def rwkv_time_mix_decode(params, x, cfg: ArchConfig, state: RwkvState):
+    """Single-token decode: O(1) state update. x: (B, 1, D)."""
+    b, _, d = x.shape
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    r, k, v, g, log_w = _projections(params, x, state.x_prev_t, cfg)
+    r = r[:, 0].astype(jnp.float32)     # (B, H, hd)
+    k = k[:, 0].astype(jnp.float32)
+    v = v[:, 0].astype(jnp.float32)
+    w = jnp.exp(log_w[:, 0])            # (B, H, hd)
+    u = params["bonus_u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, state.wkv + u[None, :, :, None] * kv)
+    s_new = state.wkv * w[..., None] + kv
+    o = o.reshape(b, 1, d).astype(x.dtype)
+    from repro.models.common import group_norm_heads
+    o = group_norm_heads(o, params["ln_x_w"], params["ln_x_b"], h)
+    o = o * jax.nn.silu(g)
+    y = o @ params["w_o"]
+    return y, RwkvState(s_new, x[:, -1], state.x_prev_c)
+
+
+def rwkv_channel_mix(params, x, x_prev):
+    """RWKV squared-ReLU channel mix with token shift."""
+    xk = _token_shift(x, x_prev, params["mu_k"])
+    h = jnp.square(jax.nn.relu(xk @ params["w_in"]))
+    h = shard(h, ("batch", "seq", "ff"))
+    return h @ params["w_out"]

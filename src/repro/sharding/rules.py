@@ -1,0 +1,147 @@
+"""Logical-axis -> mesh-axis sharding rules (TP / FSDP / EP / SP).
+
+Parameters and activations use separate rule tables (Megatron/MaxText
+style). Rules degrade gracefully: a mesh axis is only applied to a tensor
+dim when the dim is divisible by the axis size and the axis is not already
+used by another dim of the same tensor (PartitionSpec uniqueness).
+
+The tables are plain dicts so perf iterations (EXPERIMENTS.md §Perf) can
+swap them per-arch without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axis = Union[None, str, tuple]
+
+# Parameter sharding: TP on model for heads/ff/vocab/experts, FSDP (ZeRO)
+# on data for the embed dim.
+PARAM_RULES: dict[Optional[str], Axis] = {
+    "embed": "data",
+    "embed_table": "data",
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    None: None,
+}
+
+# Activation constraints: batch over (pod, data); TP'd hidden dims on model.
+ACT_RULES: dict[Optional[str], Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    None: None,
+}
+
+
+def _axis_size(mesh_shape: dict, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        size = 1
+        for a in axis:
+            size *= mesh_shape.get(a, 1)
+        return size
+    return mesh_shape.get(axis, 1)
+
+
+def _present(axis: Axis, mesh_shape: dict) -> Axis:
+    """Drop mesh axes that do not exist in this mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh_shape)
+        return kept if kept else None
+    return axis if axis in mesh_shape else None
+
+
+def pspec_for(shape: tuple, logical_axes: tuple, mesh: Mesh,
+              rules: Optional[dict] = None) -> PartitionSpec:
+    """PartitionSpec for one tensor given its logical axes."""
+    rules = rules or PARAM_RULES
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if hasattr(mesh, "devices") else dict(mesh.shape)
+    used: set = set()
+    spec = []
+    for dim, logical in zip(shape, logical_axes):
+        axis = _present(rules.get(logical), mesh_shape)
+        names = axis if isinstance(axis, tuple) else \
+            (axis,) if axis else ()
+        size = _axis_size(mesh_shape, axis)
+        if axis is not None and size > 1 and dim % size == 0 \
+                and not (set(names) & used):
+            used |= set(names)
+            spec.append(axis)
+        else:
+            spec.append(None)
+    return PartitionSpec(*spec)
+
+
+def param_shardings(shapes_tree, axes_tree, mesh: Mesh,
+                    rules: Optional[dict] = None):
+    """NamedSharding tree matching a (shapes, axes) tree pair. The shapes
+    tree (ShapeDtypeStruct leaves) drives the structure so the axes tuples
+    are treated as leaves."""
+    def one(shaped, axes):
+        return NamedSharding(mesh, pspec_for(tuple(shaped.shape), axes, mesh,
+                                             rules))
+    return jax.tree.map(one, shapes_tree, axes_tree)
+
+
+def batch_pspec(mesh: Mesh) -> PartitionSpec:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return PartitionSpec(axes if axes else None)
+
+
+def activation_rules(mesh: Mesh) -> dict:
+    """ACT_RULES filtered to this mesh (installed via common.set_activation_rules)."""
+    mesh_axes = set(mesh.axis_names)
+    out = {}
+    for k, v in ACT_RULES.items():
+        if isinstance(v, tuple):
+            v = tuple(a for a in v if a in mesh_axes) or None
+        elif v is not None and v not in mesh_axes:
+            v = None
+        out[k] = v
+    return out
+
+
+def cache_logical_axes(kind: str) -> dict:
+    """Logical axes for KV / recurrent cache leaves (stacked layer dim)."""
+    if kind == "kv":
+        return ("layers", "batch", "seq", "kv_heads", None)
+    raise ValueError(kind)
+
+
+def cache_pspec(shape: tuple, mesh: Mesh) -> PartitionSpec:
+    """Sharding for a stacked KV-cache leaf (layers, B, S, Hkv, Dh):
+    batch -> (pod, data); kv_heads -> model when divisible, else seq ->
+    model (sequence-sharded cache), else replicated."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = mesh_shape.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    layers, b, s, hkv, dh = shape
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_shape[a]
+    if dp and b % dp_size != 0:
+        dp = ("data",) if "data" in mesh_shape \
+            and b % mesh_shape["data"] == 0 else ()
+    spec = [None, dp or None, None, None, None]
+    if hkv % tp == 0 and tp > 1:
+        spec[3] = "model"
+    elif s % tp == 0 and tp > 1:
+        spec[2] = "model"
+    return PartitionSpec(*spec)

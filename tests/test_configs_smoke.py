@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes and no NaNs. The full
+configs are exercised only via the dry run (brief requirement)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCHS
+from repro.data.pipeline import embeddings_batch
+from repro.models import transformer as tfm
+from repro.models.common import split_tree
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _make_batch(cfg, b, s, rng):
+    if cfg.input_mode == "embeddings":
+        batch = {k: jnp.asarray(v)
+                 for k, v in embeddings_batch(cfg, b, s, step=0).items()}
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)),
+                           jnp.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_train_step(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    params, _ = split_tree(tfm.init_model(jax.random.PRNGKey(0), cfg))
+    batch = _make_batch(cfg, 2, 16, rng)
+    loss, metrics = jax.jit(
+        lambda p, b: tfm.forward_train(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), arch
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_prefill_decode_shapes(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    params, _ = split_tree(tfm.init_model(jax.random.PRNGKey(0), cfg))
+    b, s, cache_len = 2, 12, 16
+    batch = _make_batch(cfg, b, s, rng)
+    batch.pop("labels", None)
+    logits, caches = jax.jit(
+        lambda p, bt: tfm.forward_prefill(p, cfg, bt, cache_len))(params,
+                                                                  batch)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    toks = jnp.zeros((b, 1), jnp.int32)
+    logits2, caches2 = jax.jit(
+        lambda p, t, c: tfm.forward_decode(p, cfg, t, c,
+                                           jnp.asarray(s)))(params, toks,
+                                                            caches)
+    assert logits2.shape == (b, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits2)))
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b", "qwen2-vl-7b"])
+def test_prefill_decode_consistency(arch, rng):
+    """Decode after prefill == the train-mode forward at the same position
+    (MoE archs excluded: capacity dropping is batch-composition dependent)."""
+    cfg = ARCHS[arch].reduced()
+    params, _ = split_tree(tfm.init_model(jax.random.PRNGKey(1), cfg))
+    b, s, cl = 2, 12, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+    if cfg.input_mode == "embeddings":
+        mk = lambda t: {"embeds": jnp.take(params["embed"], t, axis=0)}
+    else:
+        mk = lambda t: {"tokens": t}
+    lp, caches = tfm.forward_prefill(params, cfg, mk(toks[:, :s]), cl)
+    ld, _ = tfm.forward_decode(params, cfg, toks[:, s:s + 1], caches,
+                               jnp.asarray(s))
+    x, positions = tfm._embed_inputs(params, cfg, mk(toks))
+    xo, _, _ = tfm._run_segments(params, cfg, x, positions, mesh=None,
+                                 impl="reference", mode="train")
+    la = tfm._lm_head(params, cfg, xo)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(la[:, s - 1]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(la[:, s]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_consistency_with_headroom_capacity(rng):
+    cfg = ARCHS["qwen3-moe-235b-a22b"].reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params, _ = split_tree(tfm.init_model(jax.random.PRNGKey(0), cfg))
+    b, s, cl = 2, 12, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+    lp, caches = tfm.forward_prefill(params, cfg, {"tokens": toks[:, :s]}, cl)
+    ld, _ = tfm.forward_decode(params, cfg, toks[:, s:s + 1], caches,
+                               jnp.asarray(s))
+    x, positions = tfm._embed_inputs(params, cfg, {"tokens": toks})
+    xo, _, _ = tfm._run_segments(params, cfg, x, positions, mesh=None,
+                                 impl="reference", mode="train")
+    la = tfm._lm_head(params, cfg, xo)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(la[:, s]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_segments_cover_all_layers():
+    for arch, cfg in ARCHS.items():
+        segs = tfm.compute_segments(cfg)
+        assert sum(len(u) * r for u, r in segs) == cfg.num_layers, arch
+
+
+def test_recurrentgemma_pattern():
+    segs = tfm.compute_segments(ARCHS["recurrentgemma-2b"])
+    assert segs[0] == (("rec", "rec", "local"), 8)
+    assert segs[1] == (("rec",), 2)
+
+
+def test_deepseek_moe_first_dense():
+    segs = tfm.compute_segments(ARCHS["deepseek-moe-16b"])
+    assert segs[0] == (("dense0",), 1)
+    assert segs[1] == (("moe",), 27)
+
+
+def test_long_500k_applicability():
+    long = SHAPES["long_500k"]
+    eligible = {a for a in ARCHS if shape_applicable(ARCHS[a], long)}
+    assert eligible == {"rwkv6-1.6b", "recurrentgemma-2b"}
+
+
+def test_exact_published_configs():
+    c = ARCHS["qwen1.5-110b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (80, 8192, 64, 8, 49152, 152064)
+    assert c.qkv_bias
+    m = ARCHS["qwen3-moe-235b-a22b"]
+    assert (m.num_layers, m.moe.num_experts, m.moe.top_k) == (94, 128, 8)
+    d = ARCHS["deepseek-moe-16b"]
+    assert (d.moe.num_shared_experts, d.moe.num_experts, d.moe.top_k) \
+        == (2, 64, 6)
+    r = ARCHS["recurrentgemma-2b"]
+    assert (r.num_layers, r.d_model, r.window) == (26, 2560, 2048)

@@ -1,0 +1,97 @@
+"""Additional hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import object_store_ckpt as ckpt
+from repro.core import breakeven, token_bucket
+from repro.core.storage_service import ObjectStore
+
+MIB = 1024 ** 2
+
+
+# -- token bucket ------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(nbytes=st.integers(1, 10 * 1024 ** 3))
+def test_transfer_time_monotone_and_bounded(nbytes):
+    """More bytes never transfer faster; throughput lies between baseline
+    and burst bandwidth."""
+    t = token_bucket.transfer_time(float(nbytes))
+    t2 = token_bucket.transfer_time(float(nbytes) * 2)
+    assert t2 >= t
+    bw = nbytes / max(t, 1e-12)
+    cfg = token_bucket.LAMBDA_INBOUND
+    assert bw <= cfg.burst_bw * 1.01
+    if nbytes > cfg.initial_bytes:
+        assert bw >= cfg.baseline_bw * 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(consume=st.integers(0, 400 * 1024 ** 2))
+def test_bucket_refill_never_exceeds_initial(consume):
+    b = token_bucket.TokenBucket(token_bucket.LAMBDA_INBOUND)
+    b.consume(float(consume))
+    b.notify_idle()
+    assert b.tokens <= token_bucket.LAMBDA_INBOUND.initial_bytes
+
+
+# -- break-evens ---------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(size=st.integers(1024, 64 * 1024 ** 2))
+def test_bei_request_inverse_in_access_size(size):
+    """Without transfer fees, BEI is inversely proportional to access size
+    (the paper's 'initial rule')."""
+    a = breakeven.bei_ram_s3(float(size))
+    b = breakeven.bei_ram_s3(float(size) * 2)
+    assert a / b == pytest.approx(2.0, rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(size=st.integers(2 * 1024 ** 2, 64 * 1024 ** 2))
+def test_bei_transfer_fee_breaks_inverse_rule(size):
+    """With S3 Express' per-GiB fee the inverse rule must NOT hold
+    (paper 5.3.1 'Pricing Model') — beyond the 512 KiB free-transfer tier."""
+    a = breakeven.bei_ram_s3(float(size), express=True)
+    b = breakeven.bei_ram_s3(float(size) * 2, express=True)
+    assert a / b < 1.99
+
+
+# -- checkpoint round-trips ------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 7), st.integers(1, 7)), min_size=1, max_size=4),
+    step=st.integers(0, 10 ** 6))
+def test_checkpoint_roundtrip_arbitrary_trees(shapes, step):
+    rng = np.random.default_rng(0)
+    tree = {f"leaf{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    store = ObjectStore()
+    ckpt.save_checkpoint(store, "p", step, tree)
+    back, got_step = ckpt.restore_checkpoint(store, "p", tree)
+    assert got_step == step
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+# -- grad compression (pure quantization invariants, no mesh) ---------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+def test_ef_quantization_error_bounded(seed, scale):
+    from repro.train.grad_compression import ef_compress
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((16,)) * scale, jnp.float32)
+    e = jnp.zeros((16,), jnp.float32)
+    q, s, new_e = ef_compress(g, e)
+    # error bounded by half an int8 step
+    assert float(jnp.max(jnp.abs(new_e))) <= float(s) * 0.5 + 1e-6
+    # dequant + error reconstructs exactly
+    np.testing.assert_allclose(np.asarray(q, np.float32) * float(s)
+                               + np.asarray(new_e), np.asarray(g),
+                               rtol=1e-5, atol=float(s) * 1e-3)

@@ -1,0 +1,101 @@
+"""Elastic/provisioned pools, stage scheduler, straggler mitigation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.elastic_pool import (ColdStartModel, ElasticPool, FaasLimits,
+                                     ProvisionedPool)
+from repro.core.scheduler import (Fragment, Stage, StageScheduler,
+                                  StragglerPolicy)
+
+
+def test_cold_then_warm_starts():
+    pool = ElasticPool()
+    w1 = pool.acquire(8, t=0.0)
+    assert pool.stats["cold_starts"] == 8
+    pool.release(w1, t=1.0)
+    w2 = pool.acquire(8, t=2.0)
+    assert pool.stats["warm_starts"] == 8
+    # warm routing is much faster than cold placement+fetch
+    assert max(w.ready_at for w in w2) - 2.0 < 0.2
+
+
+def test_idle_expiry_forces_cold_start():
+    pool = ElasticPool(limits=FaasLimits(idle_lifetime_s=10.0))
+    pool.release(pool.acquire(4, 0.0), t=1.0)
+    pool.acquire(4, t=100.0)
+    assert pool.stats["cold_starts"] == 8
+
+
+def test_lambda_scaling_limits():
+    """Initial burst of 3000, then +500/min (paper §2)."""
+    pool = ElasticPool()
+    ws = pool.acquire(4000, t=0.0)
+    ready = sorted(w.ready_at for w in ws)
+    assert ready[2999] < 1.5          # burst capacity ~immediate
+    assert ready[-1] >= 60.0          # the next 1000 wait on +500/min
+
+
+def test_concurrency_quota():
+    pool = ElasticPool()
+    with pytest.raises(RuntimeError):
+        pool.acquire(20000, t=0.0)
+
+
+def test_two_level_invocation_cheaper_per_worker():
+    cs = ColdStartModel()
+    pool = ElasticPool(coldstart=cs)
+    big = pool.acquire(512, t=0.0)     # two-level fan-out path
+    lat_big = np.median([w.ready_at for w in big])
+    pool2 = ElasticPool(coldstart=cs)
+    seq_rtt = 512 * cs.fanout_rtt_s    # naive sequential invocation cost
+    assert lat_big < seq_rtt
+
+
+def test_provisioned_pool_queues_on_slots():
+    pool = ProvisionedPool(slots=2, boot_s=0.0)
+    ends = [pool.schedule_fragment(0.0, 1.0) for _ in range(4)]
+    assert sorted(ends) == [1.0, 1.0, 2.0, 2.0]
+
+
+def test_scheduler_respects_dependencies():
+    sched = StageScheduler(ProvisionedPool(slots=4, boot_s=0.0))
+    order = []
+    stages = [
+        Stage("a", [Fragment(0, lambda: order.append("a"), 0.1)]),
+        Stage("b", [Fragment(0, lambda: order.append("b"), 0.1)],
+              deps=["a"]),
+        Stage("c", [Fragment(0, lambda: order.append("c"), 0.1)],
+              deps=["a", "b"]),
+    ]
+    res = sched.run(stages)
+    assert order == ["a", "b", "c"]
+    assert res["b"].start_t >= res["a"].end_t
+    assert res["c"].start_t >= res["b"].end_t
+
+
+def test_straggler_retrigger_improves_makespan():
+    """Re-triggering (paper §3.2) must beat waiting out the stragglers."""
+    def makespan(retries):
+        policy = StragglerPolicy(slowdown_factor=2.0, max_retries=retries)
+        sched = StageScheduler(ProvisionedPool(slots=64, boot_s=0.0),
+                               policy=policy, straggler_prob=0.3, rng_seed=1)
+        frags = [Fragment(i, lambda: None, est_duration_s=1.0)
+                 for i in range(64)]
+        res = sched.run([Stage("s", frags)])["s"]
+        return res.end_t - res.start_t, res.retried_fragments
+
+    with_retry, retried = makespan(3)
+    without, _ = makespan(0)
+    assert retried > 0
+    assert with_retry <= without
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), est=st.floats(0.05, 2.0))
+def test_stage_node_seconds_at_least_nominal(n, est):
+    sched = StageScheduler(ProvisionedPool(slots=128, boot_s=0.0),
+                           straggler_prob=0.0, rng_seed=0)
+    frags = [Fragment(i, lambda: None, est_duration_s=est) for i in range(n)]
+    res = sched.run([Stage("s", frags)])["s"]
+    assert res.node_seconds >= n * est * 0.7

@@ -1,0 +1,149 @@
+"""Storage service models, object store semantics, burst/shuffle planners,
+hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import burst_planner, token_bucket
+from repro.core.partition_scaling import PartitionModel
+from repro.core.storage_service import (DYNAMODB_PROFILE, EFS_PROFILE,
+                                        LatencyModel, ObjectStore, PROFILES,
+                                        S3_EXPRESS_PROFILE,
+                                        S3_STANDARD_PROFILE, ThrottledError,
+                                        aggregated_throughput, iops)
+
+GIB = 1024 ** 3
+MIB = 1024 ** 2
+
+
+# -- Fig 8/9/10 models ------------------------------------------------------
+
+def test_s3_scales_linearly_to_250_gibs():
+    assert aggregated_throughput(S3_STANDARD_PROFILE, 1) == pytest.approx(2 * GIB)
+    assert aggregated_throughput(S3_STANDARD_PROFILE, 128) == \
+        pytest.approx(250 * GIB, rel=0.05)
+
+
+def test_ddb_saturates_at_single_client():
+    one = aggregated_throughput(DYNAMODB_PROFILE, 1)
+    many = aggregated_throughput(DYNAMODB_PROFILE, 64)
+    assert one == pytest.approx(380 * MIB)
+    assert many == one
+
+
+def test_efs_quota_ceiling():
+    assert aggregated_throughput(EFS_PROFILE, 128) <= 20 * GIB
+    assert aggregated_throughput(EFS_PROFILE, 128, read=False) <= 5 * GIB
+
+
+def test_iops_ordering_matches_paper():
+    # Express > DDB > EFS > S3 standard for read IOPS (Fig 9).
+    r = {n: iops(p) for n, p in PROFILES.items()}
+    assert r["s3-express"] > r["dynamodb"] > r["s3-standard"]
+    assert iops(EFS_PROFILE, containers=2) == 2 * iops(EFS_PROFILE)
+    assert iops(EFS_PROFILE, containers=4) == 2 * iops(EFS_PROFILE)
+
+
+def test_latency_quantiles():
+    m = LatencyModel(S3_STANDARD_PROFILE.read_latency_q)
+    assert m.quantile(0.5) == pytest.approx(0.027, rel=0.05)
+    assert m.quantile(0.95) == pytest.approx(0.075, rel=0.10)
+    rng = np.random.default_rng(0)
+    s = m.sample(rng, 1_000_000)
+    assert np.median(s) == pytest.approx(0.027, rel=0.1)
+    assert s.max() <= 10.1 + 1e-6
+    assert s.max() > 1.0          # the paper's 374x-median tail exists
+
+
+# -- object store -----------------------------------------------------------
+
+def test_object_store_roundtrip_and_metering():
+    store = ObjectStore()
+    store.put("a/b", b"hello")
+    assert store.get("a/b") == b"hello"
+    assert store.get("a/b", byte_range=(1, 3)) == b"el"
+    assert store.list("a/") == ["a/b"]
+    assert store.stats.writes == 1 and store.stats.reads == 2
+    assert store.stats.write_bytes == 5
+
+
+def test_object_store_throttling_and_retry():
+    clock = {"t": 0.0}
+    model = PartitionModel()
+    store = ObjectStore(partition_model=model,
+                        clock=lambda: clock["t"])
+    store.put("k", b"x" * 10)
+    # Saturate far beyond one partition's capacity within one window.
+    throttled = 0
+    for i in range(12000):
+        try:
+            store.get("k")
+        except ThrottledError:
+            throttled += 1
+    assert throttled > 0
+    assert store.stats.throttled == throttled
+    # Retrying get succeeds once the window advances.
+    clock["t"] += 10.0
+    assert store.retrying_get("k") == b"x" * 10
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.binary(min_size=0, max_size=2048),
+       key=st.text(alphabet="abc/xyz", min_size=1, max_size=12))
+def test_object_store_put_get_identity(data, key):
+    store = ObjectStore()
+    store.put(key, data)
+    assert store.get(key) == data
+    assert store.size(key) == len(data)
+
+
+# -- planners ----------------------------------------------------------------
+
+def test_plan_scan_keeps_workers_in_burst():
+    plan = burst_planner.plan_scan(
+        total_bytes=100 * GIB, partition_bytes=182 * MIB, max_workers=1024)
+    assert plan.within_burst
+    assert plan.bytes_per_worker <= token_bucket.burst_budget_bytes()
+    assert plan.workers <= 1024
+
+
+def test_plan_scan_degrades_when_capped():
+    plan = burst_planner.plan_scan(
+        total_bytes=100 * GIB, partition_bytes=182 * MIB, max_workers=16)
+    assert not plan.within_burst
+    assert plan.expected_bw_per_worker < 1.0 * GIB
+
+
+@settings(max_examples=30, deadline=None)
+@given(total=st.integers(1, 10 ** 12), part=st.integers(1, 10 ** 9),
+       workers=st.integers(1, 2048))
+def test_plan_scan_invariants(total, part, workers):
+    plan = burst_planner.plan_scan(float(total), float(part), workers)
+    assert 1 <= plan.workers <= workers
+    assert plan.partitions_per_worker >= 1
+    # all partitions are assigned
+    n_parts = -(-total // part)
+    assert plan.workers * plan.partitions_per_worker >= n_parts
+
+
+def test_plan_shuffle_warm_faster_than_cold():
+    cold = burst_planner.plan_shuffle((320, 320), 2 * MIB,
+                                      warm_partitions=1,
+                                      interactive_deadline_s=None)
+    warm = burst_planner.plan_shuffle((320, 320), 2 * MIB,
+                                      warm_partitions=5,
+                                      interactive_deadline_s=None)
+    assert warm.expected_shuffle_s < cold.expected_shuffle_s
+    assert cold.read_requests == 320 * 320
+
+
+def test_plan_shuffle_express_for_deadline():
+    plan = burst_planner.plan_shuffle((320, 320), 2 * MIB,
+                                      interactive_deadline_s=1.0)
+    assert plan.storage == "s3-express"
+
+
+def test_combine_writes_targets_beas():
+    out = burst_planner.combine_writes(10 * GIB, 256 * 1024)
+    assert out["chosen_access_bytes"] >= out["beas_bytes"]
+    assert out["economical_on_object_store"] == 1.0
