@@ -1,0 +1,235 @@
+"""Engine data-plane microbenchmarks: serialization, shuffle partitioning,
+and fused vs interpreted operator execution.
+
+Tracks the hot paths this repo's PRs optimize (the paper's per-worker cost
+is scan/decode + shuffle materialization). Three comparisons:
+
+* serde      — npz (zlib Parquet stand-in) vs zero-copy frame throughput.
+* shuffle    — seed path (per-partition ``select`` rescan + npz) vs the
+               single-pass radix partitioner + raw frames.
+* pipeline   — interpreted numpy operators vs the fused jax.jit backend on
+               a filter+project+hash_agg chain.
+
+``python -m benchmarks.engine_bench`` writes ``BENCH_engine.json`` at the
+repo root so the perf trajectory is tracked across PRs; ``ALL``/``EXPECT``
+plug the same numbers into ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.engine import columnar, compile as engine_compile, operators
+from repro.engine.columnar import ColumnBatch
+from repro.engine.worker import radix_partition
+
+MIB = 1024.0 ** 2
+
+SERDE_ROWS = 500_000
+SHUFFLE_ROWS = 500_000
+SHUFFLE_PARTITIONS = 32
+PIPELINE_ROWS = 2_000_000
+REPEATS = 9
+
+
+def _lineitem(rows: int, seed: int = 0) -> ColumnBatch:
+    r = np.random.default_rng(seed)
+    return ColumnBatch({
+        "l_orderkey": r.integers(1, rows // 4, size=rows, dtype=np.int64),
+        "l_quantity": r.integers(1, 51, size=rows).astype(np.float64),
+        "l_extendedprice": np.round(r.uniform(900.0, 105000.0, rows), 2),
+        "l_discount": np.round(r.integers(0, 11, size=rows) * 0.01, 2),
+        "l_tax": np.round(r.integers(0, 9, size=rows) * 0.01, 2),
+        "l_returnflag": r.integers(0, 3, size=rows, dtype=np.int8),
+        "l_linestatus": r.integers(0, 2, size=rows, dtype=np.int8),
+        "l_shipdate": r.integers(0, 2555, size=rows, dtype=np.int32),
+    })
+
+
+def _best(fn, repeats: int = REPEATS) -> float:
+    """Min-of-N wall time (the usual microbenchmark noise floor)."""
+    gc.collect()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _best_pair(fn_a, fn_b, repeats: int = REPEATS) -> tuple[float, float]:
+    """Min-of-N for two competitors, alternating A/B each round so VM
+    noise phases (frequency scaling, neighbors) hit both sides equally."""
+    gc.collect()
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+# ---------------------------------------------------------------------------
+# 1) serialize / deserialize throughput
+# ---------------------------------------------------------------------------
+
+def bench_serde() -> dict:
+    batch = _lineitem(SERDE_ROWS)
+    mb = batch.nbytes() / MIB
+    npz = columnar.serialize(batch)
+    frame = columnar.serialize_frame(batch)
+    out = {
+        "batch_mib": mb,
+        "npz_ser_mib_s": mb / _best(lambda: columnar.serialize(batch)),
+        "frame_ser_mib_s": mb / _best(
+            lambda: columnar.serialize_frame(batch)),
+        "npz_deser_mib_s": mb / _best(lambda: columnar.deserialize(npz)),
+        "frame_deser_mib_s": mb / _best(
+            lambda: columnar.deserialize(frame)),
+        "npz_bytes": len(npz),
+        "frame_bytes": len(frame),
+    }
+    out["ser_speedup"] = out["frame_ser_mib_s"] / out["npz_ser_mib_s"]
+    out["deser_speedup"] = out["frame_deser_mib_s"] / out["npz_deser_mib_s"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2) shuffle partitioning: seed per-partition rescan+npz vs radix+frames
+# ---------------------------------------------------------------------------
+
+def _shuffle_seed(batch: ColumnBatch, r: int) -> list[bytes]:
+    """The seed engine's writer loop: one full-batch scan per partition,
+    npz-compressed objects."""
+    assign = np.asarray(batch["l_orderkey"]).astype(np.int64) % r
+    return [columnar.serialize(batch.select(assign == p)) for p in range(r)]
+
+
+def _shuffle_radix(batch: ColumnBatch, r: int) -> list[bytes]:
+    return [columnar.serialize_frame(p)
+            for p in radix_partition(batch, "l_orderkey", r)
+            if p.num_rows]
+
+
+def bench_shuffle() -> dict:
+    batch = _lineitem(SHUFFLE_ROWS, seed=1)
+    r = SHUFFLE_PARTITIONS
+    seed_s = _best(lambda: _shuffle_seed(batch, r))
+    radix_s = _best(lambda: _shuffle_radix(batch, r))
+    mb = batch.nbytes() / MIB
+    return {
+        "rows": batch.num_rows, "partitions": r, "batch_mib": mb,
+        "seed_s": seed_s, "radix_s": radix_s,
+        "seed_mib_s": mb / seed_s, "radix_mib_s": mb / radix_s,
+        "speedup": seed_s / radix_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3) fused (jit) vs interpreted (numpy) operator pipeline
+# ---------------------------------------------------------------------------
+
+# A Q1/Q6/Q12-blend: selective multi-predicate filter (range + set
+# membership), derived-column projection, grouped aggregation — the agg
+# profile mirrors Q1's (sums + count).
+_PIPELINE_OPS = [
+    {"op": "filter", "expr": ["and",
+                              ["ge", "l_shipdate", 731],
+                              ["lt", "l_shipdate", 731 + 365],
+                              ["between", "l_discount", 0.05, 0.07],
+                              ["in", "l_returnflag", [0, 2]],
+                              ["lt", "l_quantity", 24.0]]},
+    {"op": "project", "columns": [
+        "l_returnflag", "l_linestatus", "l_quantity", "l_extendedprice",
+        "l_discount",
+        ["disc_price", ["mul", "l_extendedprice", ["sub1", "l_discount"]]],
+        ["charge", ["mul", ["mul", "l_extendedprice", ["sub1", "l_discount"]],
+                    ["add1", "l_tax"]]]]},
+    {"op": "hash_agg", "keys": ["l_returnflag", "l_linestatus"],
+     "aggs": [["sum_qty", "sum", "l_quantity"],
+              ["sum_base_price", "sum", "l_extendedprice"],
+              ["sum_disc_price", "sum", "disc_price"],
+              ["sum_charge", "sum", "charge"],
+              ["sum_disc", "sum", "l_discount"],
+              ["count_order", "count", "l_quantity"]]},
+]
+
+
+def bench_pipeline() -> dict:
+    batch = _lineitem(PIPELINE_ROWS, seed=2)
+    # Warm both paths (jit compilation happens on the first call).
+    engine_compile.run_pipeline(batch, _PIPELINE_OPS, backend="jit")
+    operators.run_pipeline_ops(batch, _PIPELINE_OPS)
+    numpy_s, jit_s = _best_pair(
+        lambda: operators.run_pipeline_ops(batch, _PIPELINE_OPS),
+        lambda: engine_compile.run_pipeline(batch, _PIPELINE_OPS,
+                                            backend="jit"))
+    return {
+        "rows": batch.num_rows,
+        "numpy_s": numpy_s, "jit_s": jit_s,
+        "numpy_mrows_s": batch.num_rows / numpy_s / 1e6,
+        "jit_mrows_s": batch.num_rows / jit_s / 1e6,
+        "speedup": numpy_s / jit_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def run_all() -> dict:
+    # Pipeline first: it is the most allocation-sensitive comparison and
+    # the npz benches below churn hundreds of MB through the allocator.
+    return {"pipeline": bench_pipeline(), "serde": bench_serde(),
+            "shuffle": bench_shuffle(),
+            "config": {"serde_rows": SERDE_ROWS,
+                       "shuffle_rows": SHUFFLE_ROWS,
+                       "shuffle_partitions": SHUFFLE_PARTITIONS,
+                       "pipeline_rows": PIPELINE_ROWS,
+                       "repeats": REPEATS}}
+
+
+def engine_data_plane():
+    """benchmarks.run hook: (name, us_per_call, derived) rows."""
+    results = run_all()
+    sh, pp, sd = results["shuffle"], results["pipeline"], results["serde"]
+    return [
+        ("engine/frame_deser_speedup", 0.0, sd["deser_speedup"]),
+        ("engine/shuffle_seed_mib_s", sh["seed_s"] * 1e6, sh["seed_mib_s"]),
+        ("engine/shuffle_radix_mib_s", sh["radix_s"] * 1e6,
+         sh["radix_mib_s"]),
+        ("engine/shuffle_speedup", 0.0, sh["speedup"]),
+        ("engine/pipeline_numpy_mrows_s", pp["numpy_s"] * 1e6,
+         pp["numpy_mrows_s"]),
+        ("engine/pipeline_jit_mrows_s", pp["jit_s"] * 1e6,
+         pp["jit_mrows_s"]),
+        ("engine/fused_pipeline_speedup", 0.0, pp["speedup"]),
+    ]
+
+
+EXPECT = {
+    # PR acceptance floors; ceilings are generous (hardware-dependent).
+    "engine/shuffle_speedup": (3.0, 1000.0),
+    "engine/fused_pipeline_speedup": (1.5, 1000.0),
+}
+
+ALL = [engine_data_plane]
+
+
+def main() -> None:
+    results = run_all()
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+    out.write_text(json.dumps(results, indent=2) + "\n")
+    print(json.dumps(results, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import paper_figures, paper_queries, tpu_roofline
+    from benchmarks import (engine_bench, paper_figures, paper_queries,
+                            tpu_roofline)
 
-    modules = [paper_figures, paper_queries, tpu_roofline]
+    modules = [paper_figures, paper_queries, tpu_roofline, engine_bench]
     failures = []
     print("name,us_per_call,derived")
     for mod in modules:

@@ -232,6 +232,10 @@ class ObjectStore:
     def get(self, key: str, byte_range: Optional[tuple[int, int]] = None) -> bytes:
         with self._lock:
             if key not in self._objects:
+                # A GET on a missing key is still a billed request with
+                # real latency (S3 404) — shuffle readers probing
+                # skipped-empty partitions must pay for the probe.
+                self.stats.reads += 1
                 raise KeyError(key)
             data = self._objects[key]
         self._admit(key, write=False, nbytes=len(data))

@@ -2,5 +2,5 @@
 whose coordinator and workers are stateless tasks communicating only
 through the object store, runnable in 'elastic' (FaaS) or 'provisioned'
 (IaaS) mode with identical physical plans."""
-from repro.engine import (columnar, coordinator, datagen,  # noqa: F401
-                          operators, plans, queries, worker)
+from repro.engine import (columnar, compile, coordinator,  # noqa: F401
+                          datagen, operators, plans, queries, worker)

@@ -6,10 +6,26 @@ one partition per object, with a lightweight header usable for projection
 pushdown — only requested columns are materialized from the buffer).
 String-typed TPC columns are dictionary-encoded to small ints with the
 dictionaries kept in ``DICTIONARIES`` (vectorized execution stays numeric).
+
+Two on-the-wire formats coexist:
+
+* npz (``serialize``/zlib) — the ZSTD-Parquet stand-in for *base tables*,
+  where storage cost matters more than encode speed.
+* ``FRAME_MAGIC`` frames (``serialize_frame``) — a zero-copy format for
+  *shuffle intermediates*: a JSON header plus raw little-endian column
+  buffers. Decoding a column is a single ``np.frombuffer`` view into the
+  payload; projection pushdown skips unrequested buffers without touching
+  them. Per-column zlib compression is available behind a flag for
+  network-bound deployments.
+
+``deserialize`` sniffs the magic and accepts either format.
 """
 from __future__ import annotations
 
 import io
+import json
+import struct
+import zlib
 from typing import Iterable, Optional
 
 import numpy as np
@@ -49,6 +65,8 @@ class ColumnBatch(dict):
         batches = [b for b in batches if b.num_rows]
         if not batches:
             return ColumnBatch({})
+        if len(batches) == 1:          # fast path: no copy for a lone batch
+            return batches[0]
         keys = batches[0].keys()
         return ColumnBatch(
             {k: np.concatenate([b[k] for b in batches]) for k in keys})
@@ -63,9 +81,86 @@ def serialize(batch: ColumnBatch, columns: Optional[Iterable[str]] = None
     return buf.getvalue()
 
 
+# ---------------------------------------------------------------------------
+# Zero-copy frame format (shuffle intermediates)
+# ---------------------------------------------------------------------------
+#
+# Layout:  magic(4) | flags(1) | header_len(u32 LE) | header JSON | pad |
+#          column buffers (each 16-byte aligned, concatenated in order)
+# Header:  {"cols": [[name, dtype_str, offset, stored_nbytes, raw_nbytes],
+#           ...], "rows": n}
+# flags bit 0: per-column zlib compression (offsets then index compressed
+# buffers; decoding a projection only decompresses the requested columns).
+
+FRAME_MAGIC = b"CF01"
+_FRAME_ALIGN = 16
+FLAG_COMPRESSED = 1
+
+
+def _align(n: int) -> int:
+    return (n + _FRAME_ALIGN - 1) // _FRAME_ALIGN * _FRAME_ALIGN
+
+
+def serialize_frame(batch: ColumnBatch,
+                    columns: Optional[Iterable[str]] = None,
+                    compress: bool = False) -> bytes:
+    cols = batch if columns is None else batch.project(columns)
+    payloads = []
+    meta = []
+    offset = 0
+    for name, arr in cols.items():
+        arr = np.ascontiguousarray(arr)
+        raw = arr.tobytes()
+        stored = zlib.compress(raw, 1) if compress else raw
+        meta.append([name, arr.dtype.str, offset, len(stored), len(raw)])
+        pad = _align(len(stored)) - len(stored)
+        payloads.append(stored)
+        if pad:
+            payloads.append(b"\x00" * pad)
+        offset += _align(len(stored))
+    header = json.dumps({"cols": meta, "rows": cols.num_rows}).encode()
+    flags = FLAG_COMPRESSED if compress else 0
+    prefix = FRAME_MAGIC + struct.pack("<BI", flags, len(header)) + header
+    prefix += b"\x00" * (_align(len(prefix)) - len(prefix))
+    return prefix + b"".join(payloads)
+
+
+def deserialize_frame(data: bytes,
+                      columns: Optional[Iterable[str]] = None) -> ColumnBatch:
+    """Decode a frame; unrequested column buffers are never touched. Without
+    compression each column is a zero-copy ``np.frombuffer`` view."""
+    if data[:4] != FRAME_MAGIC:
+        raise ValueError("not a columnar frame")
+    flags, header_len = struct.unpack_from("<BI", data, 4)
+    header_end = 4 + 5 + header_len
+    header = json.loads(data[9:header_end])
+    base = _align(header_end)
+    compressed = flags & FLAG_COMPRESSED
+    columns = None if columns is None else list(columns)
+    want = None if columns is None else set(columns)
+    out = {}
+    for name, dtype_str, offset, stored, raw in header["cols"]:
+        if want is not None and name not in want:
+            continue
+        dtype = np.dtype(dtype_str)
+        if compressed:
+            buf = zlib.decompress(data[base + offset:base + offset + stored])
+        else:
+            buf = data
+        count = raw // dtype.itemsize if dtype.itemsize else 0
+        out[name] = np.frombuffer(buf, dtype=dtype, count=count,
+                                  offset=0 if compressed else base + offset)
+    if want is not None:   # preserve requested order; missing name -> KeyError
+        out = {k: out[k] for k in columns}
+    return ColumnBatch(out)
+
+
 def deserialize(data: bytes, columns: Optional[Iterable[str]] = None
                 ) -> ColumnBatch:
-    """Projection pushdown: only requested columns are materialized."""
+    """Projection pushdown: only requested columns are materialized.
+    Accepts both npz table objects and zero-copy shuffle frames."""
+    if data[:4] == FRAME_MAGIC:
+        return deserialize_frame(data, columns)
     with np.load(io.BytesIO(data)) as z:
         names = list(z.files if columns is None else columns)
         return ColumnBatch({k: z[k] for k in names})
@@ -83,5 +178,5 @@ DICTIONARIES: dict[str, list[str]] = {
 
 
 def decode(name: str, codes: np.ndarray) -> list[str]:
-    d = DICTIONARIES[name]
-    return [d[int(c)] for c in codes]
+    d = np.asarray(DICTIONARIES[name])
+    return d[np.asarray(codes, dtype=np.int64)].tolist()

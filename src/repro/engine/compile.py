@@ -1,0 +1,415 @@
+"""Compiled ("jit") execution backend for the query engine.
+
+The numpy backend in ``operators.py`` interprets each expression node with
+an intermediate array per node. This module lowers the same JSON pipeline
+specs into fused kernels:
+
+* Runs of ``filter``/``project`` operators compile into a small number of
+  ``jax.jit`` functions per pipeline segment: every consecutive predicate
+  fuses into ONE mask pass (a single XLA computation over just the
+  referenced columns — no per-node numpy temporaries), rows compact once
+  per mask (one gather per column), and each projection's derived columns
+  evaluate in one fused computation over the already-compacted rows.
+* ``hash_agg`` lexsorts the group keys and hands the aggregate columns to
+  the Pallas segmented-reduction kernel (``kernels.segment_reduce``),
+  stacked so all same-mode aggregates reduce in a single kernel launch —
+  interpret mode on CPU, Mosaic on TPU, like the kernels in
+  ``kernels/ops.py``.
+* ``udf`` operators fall back to the numpy implementations (they carry
+  non-JSON broadcast arrays and data-dependent shapes).
+
+Compiled segments are cached on the JSON text of their specs, so the many
+fragments of one pipeline share a single compilation.
+
+Float caveat: XLA executes in float32 here (x64 stays disabled for the
+model stack), so aggregates can differ from the float64 numpy backend in
+the last ~2 decimal digits (the parity suite pins the tolerance), and a
+float64 value within float32 epsilon of a predicate constant can land on
+the other side of a fused filter — row sets may differ at such knife-edge
+boundaries (TPC data is quantized to 2 decimals, far coarser than that).
+Integer columns likewise narrow to int32 at the jit boundary — fused
+segments whose referenced int64 columns hold values beyond int32 range,
+and projections whose derived expressions stay in integer arithmetic,
+fall back to the interpreted path rather than silently truncate (see
+``_run_fused`` / ``_int_valued``). Full-width execution is a ROADMAP
+follow-up (local x64).
+"""
+from __future__ import annotations
+
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import operators
+from repro.engine.columnar import ColumnBatch
+from repro.kernels.segment_reduce import segment_reduce
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Expression analysis (evaluation itself is shared: operators.eval_expr /
+# eval_value traced with xp=jnp)
+# ---------------------------------------------------------------------------
+
+def _expr_refs(expr, out: set):
+    """Columns referenced by a predicate expression."""
+    op = expr[0]
+    if op in ("and", "or"):
+        for sub in expr[1:]:
+            _expr_refs(sub, out)
+    elif op == "ltcol":
+        out.update((expr[1], expr[2]))
+    else:   # lt | le | ge | eq | between | in — column name at [1]
+        out.add(expr[1])
+    return out
+
+
+def _value_refs(expr, out: set):
+    """Columns referenced by a value expression."""
+    if isinstance(expr, str):
+        out.add(expr)
+        return out
+    op = expr[0]
+    if op in ("mul", "add"):
+        _value_refs(expr[1], out)
+        _value_refs(expr[2], out)
+    elif op in ("sub1", "add1"):
+        _value_refs(expr[1], out)
+    elif op == "case_in":
+        out.add(expr[1])
+    # "const": no refs
+    return out
+
+
+def _expr_consts(expr, out: list):
+    """Literal comparison values in a predicate expression."""
+    op = expr[0]
+    if op in ("and", "or"):
+        for sub in expr[1:]:
+            _expr_consts(sub, out)
+    elif op == "between":
+        out.extend(expr[2:4])
+    elif op == "in":
+        out.extend(expr[2])
+    elif op != "ltcol":   # lt | le | ge | eq
+        out.append(expr[2])
+    return out
+
+
+def _value_consts(expr, out: list):
+    """Literal constants in a value expression."""
+    if isinstance(expr, str):
+        return out
+    op = expr[0]
+    if op == "const":
+        out.append(expr[1])
+    elif op in ("mul", "add"):
+        _value_consts(expr[1], out)
+        _value_consts(expr[2], out)
+    elif op in ("sub1", "add1"):
+        _value_consts(expr[1], out)
+    elif op == "case_in":
+        out.extend(expr[2])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused filter/project segments
+# ---------------------------------------------------------------------------
+#
+# A segment (maximal run of filter/project ops) compiles into stages over a
+# numpy column environment:
+#   MaskStage    — all consecutive predicates fused into one jitted mask
+#                  evaluation over the referenced columns, then one
+#                  compaction gather per live column;
+#   ProjectStage — pass-throughs are moved (no copy), constant outputs are
+#                  filled in numpy, and the derived expressions evaluate in
+#                  one jitted computation over the (compacted) inputs.
+# Feeding jit only the referenced columns keeps the f64->f32 dispatch
+# conversion off the untouched columns.
+
+# XLA specializes on input length, and fragment row counts are
+# data-dependent, so an unbounded shape set would recompile per fragment.
+# The first few raw lengths trace directly (steady-state fragments reuse
+# them at zero padding cost); further new lengths pad up to a power of
+# two, capping total traces per stage at _MAX_RAW_SHAPES + log2(rows).
+_MAX_RAW_SHAPES = 4
+
+
+def _bounded_shape(cols: dict, n: int, seen: set):
+    if n in seen or len(seen) < _MAX_RAW_SHAPES:
+        seen.add(n)
+        return cols, n
+    n_pad = _pow2(n)
+    if n_pad == n:
+        return cols, n
+    return {k: np.concatenate([v, np.zeros(n_pad - n, v.dtype)])
+            for k, v in cols.items()}, n_pad
+
+
+class _MaskStage:
+    def __init__(self, exprs: list):
+        self.exprs = exprs
+        self.refs = sorted(set().union(
+            *[_expr_refs(e, set()) for e in exprs]))
+        self._wide_consts = _any_wide_int(
+            sum((_expr_consts(e, []) for e in exprs), []))
+        self._seen: set = set()
+
+        @jax.jit
+        def mask_fn(cols):
+            m = operators.eval_expr(exprs[0], cols, xp=jnp)
+            for e in exprs[1:]:
+                m = m & operators.eval_expr(e, cols, xp=jnp)
+            return m
+
+        self._fn = mask_fn
+
+    def run(self, env: dict) -> dict:
+        if self._wide_consts or \
+                any(_overflows_int32(env[k]) for k in self.refs):
+            # int32 narrowing would flip the comparison: evaluate the
+            # predicates interpreted instead.
+            mask = operators.eval_expr(self.exprs[0], env)
+            for e in self.exprs[1:]:
+                mask = mask & operators.eval_expr(e, env)
+        else:
+            n = len(next(iter(env.values())))
+            cols, _ = _bounded_shape({k: env[k] for k in self.refs}, n,
+                                     self._seen)
+            mask = np.asarray(self._fn(cols))[:n]
+        idx = np.flatnonzero(mask)
+        return {k: v[idx] for k, v in env.items()}
+
+
+def _int_valued(expr, env: dict) -> bool:
+    """True when numpy would evaluate ``expr`` in integer arithmetic —
+    which the jit path would narrow to int32 and silently overflow."""
+    if isinstance(expr, str):
+        return env[expr].dtype.kind in "iu"
+    op = expr[0]
+    if op == "const":
+        return isinstance(expr[1], (int, np.integer)) \
+            and not isinstance(expr[1], bool)
+    if op in ("mul", "add"):
+        return _int_valued(expr[1], env) and _int_valued(expr[2], env)
+    return False   # sub1 / add1 / case_in produce floats
+
+
+class _ProjectStage:
+    def __init__(self, columns: list):
+        self.columns = columns
+        self.passthrough = [c for c in columns if isinstance(c, str)]
+        derived = [(c[0], c[1]) for c in columns if not isinstance(c, str)]
+        self.consts = [(name, expr) for name, expr in derived
+                       if not _value_refs(expr, set())]
+        self.computed = [(name, expr) for name, expr in derived
+                         if _value_refs(expr, set())]
+        self.refs = sorted(set().union(
+            set(), *[_value_refs(e, set()) for _, e in self.computed]))
+        self.order = [c if isinstance(c, str) else c[0] for c in columns]
+        self._wide_consts = _any_wide_int(
+            sum((_value_consts(e, []) for _, e in self.computed), []))
+        self._seen: set = set()
+
+        computed = self.computed
+
+        @jax.jit
+        def project_fn(cols):
+            n = next(iter(cols.values())).shape[0]
+            out = {}
+            for name, expr in computed:
+                v = operators.eval_value(expr, cols, xp=jnp)
+                out[name] = jnp.broadcast_to(v, (n,)) if v.ndim == 0 else v
+            return out
+
+        self._fn = project_fn if computed else None
+
+    def run(self, env: dict) -> dict:
+        if self._wide_consts \
+                or any(_overflows_int32(env[k]) for k in self.refs) \
+                or any(_int_valued(e, env) for _, e in self.computed):
+            # int32 narrowing of wide inputs, wide literals, or derived
+            # integer arithmetic would corrupt values; evaluate the whole
+            # projection interpreted (rare — TPC derived columns are
+            # float arithmetic over in-range data).
+            return dict(operators.op_project(ColumnBatch(env),
+                                             self.columns))
+        n = len(next(iter(env.values()))) if env else 0
+        out = {name: env[name] for name in self.passthrough}
+        for name, expr in self.consts:
+            out[name] = np.full(
+                n, np.asarray(operators.eval_value(expr, ColumnBatch({}))))
+        if self._fn is not None:
+            cols, _ = _bounded_shape({k: env[k] for k in self.refs}, n,
+                                     self._seen)
+            for name, v in self._fn(cols).items():
+                out[name] = np.asarray(v)[:n]
+        return {name: out[name] for name in self.order}
+
+
+@functools.lru_cache(maxsize=256)
+def _compile_segment(segment_json: str):
+    segment = json.loads(segment_json)
+    stages = []
+    i = 0
+    while i < len(segment):
+        if segment[i]["op"] == "filter":
+            exprs = []
+            while i < len(segment) and segment[i]["op"] == "filter":
+                exprs.append(segment[i]["expr"])
+                i += 1
+            stages.append(_MaskStage(exprs))
+        else:
+            stages.append(_ProjectStage(segment[i]["columns"]))
+            i += 1
+    return stages
+
+
+_INT32_MAX = np.iinfo(np.int32).max
+_INT32_MIN = np.iinfo(np.int32).min
+
+
+def _overflows_int32(v: np.ndarray) -> bool:
+    if v.dtype.kind not in "iu" or v.size == 0:
+        return False
+    if v.dtype.itemsize <= 4 and v.dtype != np.uint32:
+        return False   # int32 and narrower always fit
+    return bool(v.max() > _INT32_MAX or v.min() < _INT32_MIN)
+
+
+def _any_wide_int(consts: list) -> bool:
+    return any(isinstance(c, (int, np.integer))
+               and not isinstance(c, bool)
+               and not _INT32_MIN <= c <= _INT32_MAX for c in consts)
+
+
+def _run_fused(batch: ColumnBatch, segment: list[dict]) -> ColumnBatch:
+    if batch.num_rows == 0 or not len(batch):
+        # Empty (possibly schema-less) inputs keep the interpreted path's
+        # empty-batch semantics.
+        return operators.run_pipeline_ops(batch, segment)
+    # Per-stage int32-narrowing guards live in the stages themselves (a
+    # stage may consume wide integers produced by an earlier one).
+    env = {k: np.asarray(v) for k, v in batch.items()}
+    for stage in _compile_segment(json.dumps(segment)):
+        env = stage.run(env)
+    return ColumnBatch(env)
+
+
+# ---------------------------------------------------------------------------
+# hash_agg over the Pallas segmented reduction
+# ---------------------------------------------------------------------------
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+# Above this group cardinality the O(rows x groups) one-hot kernel loses
+# to sort+reduceat; hash_agg falls back to the numpy reduction.
+_MAX_KERNEL_GROUPS = 1024
+
+
+def _run_hash_agg(batch: ColumnBatch, keys: list[str],
+                  aggs: list[list]) -> ColumnBatch:
+    if batch.num_rows == 0:
+        return operators.op_hash_agg(batch, keys, aggs)
+    n = batch.num_rows
+    order, starts, out = operators.group_boundaries(batch, keys)
+    seg_ids = np.zeros(n, dtype=np.int64)
+    if keys:
+        seg_ids[starts] = 1
+        seg_ids = np.cumsum(seg_ids) - 1
+        # order is a true permutation only in the keyed case; the global
+        # aggregate (keys=[]) reduces in input order.
+    else:
+        order = None
+    n_groups = len(starts)
+    counts = np.diff(np.append(starts, n))
+    if n_groups > _MAX_KERNEL_GROUPS:
+        # The one-hot kernel is O(rows x groups): past this cardinality
+        # (e.g. bb_q3's per-item reduce) sort+reduceat wins by orders of
+        # magnitude, so keep the kernel for the low-cardinality TPC shape.
+        for name, fn, col in aggs:
+            if fn == "count":
+                continue
+            vals = np.asarray(batch[col], dtype=np.float64)
+            out[name] = operators._AGG_FNS[fn](
+                vals[order] if order is not None else vals, starts)
+    else:
+        # Pad rows and segments to powers of two so jit/pallas shapes
+        # recur across fragments (padding rows carry segment id -1:
+        # reduced into nothing). Same-mode aggregates stack into one
+        # kernel launch.
+        n_pad = _pow2(n)
+        s_pad = _pow2(n_groups)
+        ids = np.full(n_pad, -1, dtype=np.int32)
+        ids[:n] = seg_ids
+        for mode in ("sum", "min", "max"):
+            group = [(name, col) for name, fn, col in aggs if fn == mode]
+            if not group:
+                continue
+            vals = np.zeros((len(group), n_pad), dtype=np.float32)
+            for row, (_, col) in enumerate(group):
+                v = np.asarray(batch[col], dtype=np.float32)
+                vals[row, :n] = v[order] if order is not None else v
+            red = np.asarray(segment_reduce(vals, ids, num_segments=s_pad,
+                                            mode=mode,
+                                            interpret=_interpret()))
+            for row, (name, _) in enumerate(group):
+                out[name] = red[row, :n_groups].astype(np.float64)
+    for name, fn, _ in aggs:
+        if fn == "count":
+            out[name] = counts.astype(np.int64)
+    # Match the interpreted backend's column order: keys, then aggs.
+    return ColumnBatch({name: out[name]
+                        for name in list(keys) + [a[0] for a in aggs]})
+
+
+# ---------------------------------------------------------------------------
+# Pipeline driver
+# ---------------------------------------------------------------------------
+
+def run_pipeline_jit(batch: ColumnBatch, ops: list[dict]) -> ColumnBatch:
+    """Execute a pipeline spec with the compiled backend. Result-compatible
+    with ``operators.run_pipeline_ops`` (modulo float32 accumulation)."""
+    i = 0
+    while i < len(ops):
+        kind = ops[i]["op"]
+        if kind in ("filter", "project"):
+            j = i
+            while j < len(ops) and ops[j]["op"] in ("filter", "project"):
+                j += 1
+            batch = _run_fused(batch, ops[i:j])
+            i = j
+        elif kind == "hash_agg":
+            batch = _run_hash_agg(batch, ops[i]["keys"], ops[i]["aggs"])
+            i += 1
+        elif kind == "udf":
+            batch = operators.op_udf(batch, ops[i]["name"],
+                                     **ops[i].get("kwargs", {}))
+            i += 1
+        else:
+            raise ValueError(f"unknown operator {kind!r}")
+    return batch
+
+
+BACKENDS = {
+    "numpy": operators.run_pipeline_ops,
+    "jit": run_pipeline_jit,
+}
+
+
+def run_pipeline(batch: ColumnBatch, ops: list[dict],
+                 backend: str = "numpy") -> ColumnBatch:
+    try:
+        fn = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}") from None
+    return fn(batch, ops)

@@ -28,6 +28,13 @@ from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
 WORKER_VCPUS = 4
 WORKER_MEM_GIB = 7076.0 / 1024.0
 CPU_BYTES_PER_S = 600e6 * WORKER_VCPUS / 4   # scan+decode throughput
+# The fused/jit backend removes per-node temporaries and the per-partition
+# shuffle rescan, so a worker sustains a higher scan+decode rate (measured
+# by benchmarks/engine_bench.py; conservative constant here).
+CPU_BYTES_PER_S_BY_BACKEND = {
+    "numpy": CPU_BYTES_PER_S,
+    "jit": 2.5 * CPU_BYTES_PER_S,
+}
 IO_THREADS = 32
 S3_READ_MEDIAN_S = 0.027
 S3_WRITE_MEDIAN_S = 0.040
@@ -53,11 +60,15 @@ class Coordinator:
                  burst_aware: bool = True,
                  max_workers: int = 1024,
                  preboot: bool = True,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0,
+                 backend: str = "numpy"):
         if mode not in ("elastic", "provisioned"):
             raise ValueError(mode)
+        if backend not in CPU_BYTES_PER_S_BY_BACKEND:
+            raise ValueError(f"unknown backend {backend!r}")
         self.store = store
         self.mode = mode
+        self.backend = backend
         self.burst_aware = burst_aware
         self.max_workers = max_workers
         if mode == "elastic":
@@ -167,11 +178,13 @@ class Coordinator:
         if isinstance(pipe.input, TableInput):
             read_keys = assignments[i]
             columns = pipe.input.columns
+            missing_ok = False
         else:
             src = pipe.input.from_pipeline
             read_keys = [worker.shuffle_key(query_id, src, w, i)
                          for w in range(frag_counts[src])]
             columns = None
+            missing_ok = True   # writers skip empty shuffle partitions
         read_keys2: list[str] = []
         if pipe.input2 is not None:
             src2 = pipe.input2.from_pipeline
@@ -187,7 +200,8 @@ class Coordinator:
         return worker.FragmentSpec(
             query_id=query_id, pipeline=pipe.name, fragment=i,
             read_keys=read_keys, read_keys2=read_keys2, columns=columns,
-            ops=pipe.ops, join=pipe.join, output=output)
+            ops=pipe.ops, join=pipe.join, output=output,
+            backend=self.backend, missing_ok=missing_ok)
 
     def _estimate(self, spec: worker.FragmentSpec) -> tuple[float, float]:
         """Model-time duration of a fragment: burst-limited network transfer
@@ -201,7 +215,8 @@ class Coordinator:
         reads = len(spec.read_keys) + len(spec.read_keys2)
         net = token_bucket.transfer_time(float(in_bytes), self.bucket)
         req = reads * S3_READ_MEDIAN_S / IO_THREADS + S3_WRITE_MEDIAN_S
-        cpu = 2.0 * in_bytes / CPU_BYTES_PER_S  # ~2x decompression expansion
+        cpu_bw = CPU_BYTES_PER_S_BY_BACKEND[self.backend]
+        cpu = 2.0 * in_bytes / cpu_bw  # ~2x decompression expansion
         return net + req + cpu + 0.02, float(in_bytes)
 
     def _merge_collect(self, query_id: str, pipe: Pipeline, n_frags: int

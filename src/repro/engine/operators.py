@@ -19,17 +19,21 @@ from repro.engine.columnar import ColumnBatch
 #   | ["le", col, v] | ["eq", col, v]
 # ---------------------------------------------------------------------------
 
-def eval_expr(expr, batch: ColumnBatch) -> np.ndarray:
+# Both backends share these evaluators: the numpy backend calls them as-is
+# over ColumnBatches, the jit backend traces them with ``xp=jax.numpy``
+# over dicts of tracers (so a new op added here reaches both paths).
+
+def eval_expr(expr, batch, xp=np) -> np.ndarray:
     op = expr[0]
     if op == "and":
-        out = eval_expr(expr[1], batch)
+        out = eval_expr(expr[1], batch, xp)
         for sub in expr[2:]:
-            out = out & eval_expr(sub, batch)
+            out = out & eval_expr(sub, batch, xp)
         return out
     if op == "or":
-        out = eval_expr(expr[1], batch)
+        out = eval_expr(expr[1], batch, xp)
         for sub in expr[2:]:
-            out = out | eval_expr(sub, batch)
+            out = out | eval_expr(sub, batch, xp)
         return out
     if op == "lt":
         return batch[expr[1]] < expr[2]
@@ -43,7 +47,7 @@ def eval_expr(expr, batch: ColumnBatch) -> np.ndarray:
         c = batch[expr[1]]
         return (c >= expr[2]) & (c <= expr[3])
     if op == "in":
-        return np.isin(batch[expr[1]], np.asarray(expr[2]))
+        return xp.isin(batch[expr[1]], xp.asarray(expr[2]))
     if op == "ltcol":
         return batch[expr[1]] < batch[expr[2]]
     raise ValueError(f"unknown expr op {op!r}")
@@ -51,22 +55,23 @@ def eval_expr(expr, batch: ColumnBatch) -> np.ndarray:
 
 # Derived columns: ["mul", a, b] | ["add", a, b] | ["sub1", col] -> (1-col)
 # where a/b are column names or ["const", v] or nested.
-def eval_value(expr, batch: ColumnBatch) -> np.ndarray:
+def eval_value(expr, batch, xp=np) -> np.ndarray:
     if isinstance(expr, str):
         return batch[expr]
     op = expr[0]
     if op == "const":
-        return np.asarray(expr[1])
+        return xp.asarray(expr[1])
     if op == "mul":
-        return eval_value(expr[1], batch) * eval_value(expr[2], batch)
+        return eval_value(expr[1], batch, xp) * eval_value(expr[2], batch, xp)
     if op == "add":
-        return eval_value(expr[1], batch) + eval_value(expr[2], batch)
+        return eval_value(expr[1], batch, xp) + eval_value(expr[2], batch, xp)
     if op == "sub1":
-        return 1.0 - eval_value(expr[1], batch)
+        return 1.0 - eval_value(expr[1], batch, xp)
     if op == "add1":
-        return 1.0 + eval_value(expr[1], batch)
+        return 1.0 + eval_value(expr[1], batch, xp)
     if op == "case_in":   # ["case_in", col, [vals]] -> 1.0 / 0.0
-        return np.isin(batch[expr[1]], np.asarray(expr[2])).astype(np.float64)
+        return xp.isin(batch[expr[1]], xp.asarray(expr[2])).astype(
+            xp.result_type(1.0))   # np: float64; jnp (x64 off): float32
     raise ValueError(f"unknown value op {op!r}")
 
 
@@ -75,11 +80,21 @@ def eval_value(expr, batch: ColumnBatch) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def op_filter(batch: ColumnBatch, expr) -> ColumnBatch:
+    if batch.num_rows == 0:
+        return batch
     return batch.select(eval_expr(expr, batch))
 
 
 def op_project(batch: ColumnBatch, columns: list) -> ColumnBatch:
     """columns: list of name or [name, value-expr]."""
+    if batch.num_rows == 0:
+        # Empty inputs may lack a schema entirely (writers skip empty
+        # shuffle partitions); synthesize absent columns as empty, but
+        # keep the dtype of any column the batch does carry.
+        return ColumnBatch({
+            (c if isinstance(c, str) else c[0]):
+            (batch[c] if isinstance(c, str) and c in batch
+             else np.asarray([])) for c in columns})
     out = {}
     for c in columns:
         if isinstance(c, str):
@@ -100,15 +115,11 @@ _AGG_FNS: dict[str, Callable] = {
 }
 
 
-def op_hash_agg(batch: ColumnBatch, keys: list[str],
-                aggs: list[list]) -> ColumnBatch:
-    """Group-by aggregate. aggs: [[out_name, fn, col], ...] with fn in
-    sum|count|min|max (avg is composed as sum/count at finalization)."""
-    if batch.num_rows == 0:
-        cols = {k: np.asarray([]) for k in keys}
-        for out_name, _, _ in aggs:
-            cols[out_name] = np.asarray([])
-        return ColumnBatch(cols)
+def group_boundaries(batch: ColumnBatch, keys: list[str]
+                     ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Sort rows by ``keys`` and find group starts. Returns
+    ``(order, starts, first_key_values)`` — shared by both execution
+    backends so their grouping semantics cannot drift."""
     if keys:
         key_arrays = [np.asarray(batch[k]) for k in keys]
         order = np.lexsort(key_arrays[::-1])
@@ -123,6 +134,19 @@ def op_hash_agg(batch: ColumnBatch, keys: list[str],
         order = np.arange(batch.num_rows)
         starts = np.asarray([0])
         out = {}
+    return order, starts, out
+
+
+def op_hash_agg(batch: ColumnBatch, keys: list[str],
+                aggs: list[list]) -> ColumnBatch:
+    """Group-by aggregate. aggs: [[out_name, fn, col], ...] with fn in
+    sum|count|min|max (avg is composed as sum/count at finalization)."""
+    if batch.num_rows == 0:
+        cols = {k: np.asarray([]) for k in keys}
+        for out_name, _, _ in aggs:
+            cols[out_name] = np.asarray([])
+        return ColumnBatch(cols)
+    order, starts, out = group_boundaries(batch, keys)
     for out_name, fn, col in aggs:
         if fn == "count":
             ends = np.append(starts[1:], len(order))

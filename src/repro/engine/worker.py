@@ -2,9 +2,18 @@
 
 A worker parses its fragment spec, reads its input partitions in batches
 from shared storage (with projection pushdown), executes the vectorized
-operator chain, partitions its output, and writes it back to storage.
+operator chain (numpy-interpreted or jit-compiled, per the fragment's
+``backend``), partitions its output, and writes it back to storage.
 Workers never talk to each other — all communication is through the object
 store, as serverless functions require.
+
+Shuffle output uses a single-pass radix partitioner: one stable argsort of
+``key % r`` orders every row by destination, a bincount gives partition
+boundaries, and each partition is a contiguous slice of the reordered
+columns — O(rows log rows) total instead of the per-partition rescan's
+O(rows x partitions). Partitions serialize as zero-copy columnar frames
+(``columnar.serialize_frame``), and empty partitions are skipped entirely:
+readers treat a missing shuffle object as zero rows (``missing_ok``).
 """
 from __future__ import annotations
 
@@ -13,7 +22,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.storage_service import ObjectStore
-from repro.engine import columnar, operators
+from repro.engine import columnar, compile as engine_compile, operators
 from repro.engine.columnar import ColumnBatch
 
 
@@ -28,6 +37,8 @@ class FragmentSpec:
     ops: list[dict]
     join: dict | None
     output: dict                        # {"type": "shuffle"|"collect", ...}
+    backend: str = "numpy"              # "numpy" | "jit"
+    missing_ok: bool = False            # inputs may be skipped-empty objects
 
 
 @dataclasses.dataclass
@@ -61,10 +72,17 @@ def _resolve_broadcasts(store: ObjectStore, ops: list[dict],
 
 
 def _read_side(store: ObjectStore, keys: list[str], columns,
-               metrics: FragmentMetrics) -> ColumnBatch:
+               metrics: FragmentMetrics, missing_ok: bool = False
+               ) -> ColumnBatch:
     batches = []
     for key in keys:
-        data = store.retrying_get(key)
+        try:
+            data = store.retrying_get(key)
+        except KeyError:
+            if missing_ok:   # empty shuffle partition: writer skipped it
+                metrics.read_requests += 1   # the 404 probe is a request
+                continue
+            raise
         metrics.read_requests += 1
         metrics.read_bytes += len(data)
         batches.append(columnar.deserialize(data, columns))
@@ -73,33 +91,53 @@ def _read_side(store: ObjectStore, keys: list[str], columns,
     return batch
 
 
+def radix_partition(batch: ColumnBatch, key_col: str, partitions: int
+                    ) -> list[ColumnBatch]:
+    """Single-pass shuffle partitioner. Returns ``partitions`` batches,
+    the i-th holding the rows with ``key % partitions == i`` (empty batches
+    share the reordered arrays via zero-length views)."""
+    if batch.num_rows == 0:
+        return [batch] * partitions
+    assign = np.asarray(batch[key_col]).astype(np.int64) % partitions
+    order = np.argsort(assign, kind="stable")
+    counts = np.bincount(assign, minlength=partitions)
+    bounds = np.concatenate(([0], np.cumsum(counts)))
+    reordered = {k: np.asarray(v)[order] for k, v in batch.items()}
+    out = []
+    for p in range(partitions):
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        out.append(ColumnBatch({k: v[lo:hi] for k, v in reordered.items()}))
+    return out
+
+
 def execute_fragment(store: ObjectStore, spec: FragmentSpec
                      ) -> FragmentMetrics:
     metrics = FragmentMetrics()
-    batch = _read_side(store, spec.read_keys, spec.columns, metrics)
+    batch = _read_side(store, spec.read_keys, spec.columns, metrics,
+                       missing_ok=spec.missing_ok)
     if spec.join is not None:
-        build = _read_side(store, spec.read_keys2, None, metrics)
+        # Build side is always shuffle output, so always missing-tolerant.
+        build = _read_side(store, spec.read_keys2, None, metrics,
+                           missing_ok=True)
         batch = operators.op_hash_join(batch, build, spec.join["left_key"],
                                        spec.join["right_key"])
     ops = _resolve_broadcasts(store, spec.ops, metrics)
-    batch = operators.run_pipeline_ops(batch, ops)
+    batch = engine_compile.run_pipeline(batch, ops, backend=spec.backend)
     metrics.rows_out = batch.num_rows
 
     out = spec.output
     if out["type"] == "shuffle":
-        r = out["partitions"]
-        key_col = np.asarray(batch[out["partition_by"]]) if batch.num_rows \
-            else np.asarray([], dtype=np.int64)
-        assign = (key_col.astype(np.int64) % r) if batch.num_rows else key_col
-        for part in range(r):
-            sel = batch.select(assign == part) if batch.num_rows else batch
-            data = columnar.serialize(sel)
+        parts = radix_partition(batch, out["partition_by"], out["partitions"])
+        for part, sel in enumerate(parts):
+            if sel.num_rows == 0:
+                continue   # readers tolerate the missing object
+            data = columnar.serialize_frame(sel)
             store.put(shuffle_key(spec.query_id, spec.pipeline,
                                   spec.fragment, part), data)
             metrics.write_requests += 1
             metrics.write_bytes += len(data)
     else:
-        data = columnar.serialize(batch)
+        data = columnar.serialize_frame(batch)
         store.put(result_key(spec.query_id, spec.pipeline, spec.fragment),
                   data)
         metrics.write_requests += 1

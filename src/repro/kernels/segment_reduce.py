@@ -1,0 +1,138 @@
+"""Pallas segmented reduction over sorted segment ids.
+
+Backs the query engine's ``hash_agg`` in the jit backend: values arrive
+sorted by group (the compiler lexsorts the keys), each row carrying its
+group id, and the kernel reduces every segment to one output slot.
+
+Per grid step a ``(C, block_n)`` slab of value columns is expanded against
+a ``(block_n, num_segments)`` one-hot membership matrix; ``sum``/``count``
+reduce every column at once as a single ``(C, bn) @ (bn, S)`` matmul on
+the MXU, and ``min``/``max`` use masked VPU reductions, accumulated into a
+persistent output block across grid steps (sequential minor-most grid
+dimension, as in ``moe_gmm``). Rows padded to the block size carry segment
+id ``-1`` and match no column. Like the other kernels in this package,
+interpret mode gives bit-accurate execution on CPU; on TPU the same body
+compiles to Mosaic. Interpret mode executes one eager dispatch per grid
+step, so on CPU the default block covers the whole array in one step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_INIT = {"sum": 0.0, "count": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+_INTERPRET_MAX_BLOCK = 1 << 20
+# Cap block_n x s_pad in interpret mode (~64 MiB float32 per step).
+_ONEHOT_ELEM_BUDGET = 1 << 24
+
+
+def _segment_reduce_kernel(vals_ref, ids_ref, out_ref, *, mode: str):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INIT[mode])
+
+    vals = vals_ref[...].astype(jnp.float32)           # (C, bn)
+    ids = ids_ref[0]                                   # (bn,) int32
+    n_seg = out_ref.shape[-1]
+    seg = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], n_seg), 1)
+    onehot = ids[:, None] == seg                       # (bn, S)
+    if mode in ("sum", "count"):
+        if mode == "count":
+            vals = jnp.ones_like(vals)
+        out_ref[...] += jax.lax.dot_general(
+            vals, onehot.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    elif mode in ("min", "max"):
+        combine = jnp.minimum if mode == "min" else jnp.maximum
+        sentinel = _INIT[mode]
+        for c in range(vals.shape[0]):                 # C is static, small
+            masked = jnp.where(onehot, vals[c][:, None], sentinel)
+            red = masked.min(axis=0) if mode == "min" else masked.max(axis=0)
+            out_ref[c] = combine(out_ref[c], red)
+    else:
+        raise ValueError(f"unknown reduction mode {mode!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "mode",
+                                             "block_n", "interpret"))
+def _segment_reduce_2d(vals, seg_ids, *, num_segments: int, mode: str,
+                       block_n: int | None, interpret: bool):
+    c, n = vals.shape
+    # TPU tiling wants 128-lane alignment; the interpreter does not, and
+    # the one-hot expansion is O(block_n x s_pad) memory per step, so on
+    # CPU the block is as large as an element budget allows (fewer eager
+    # interpreter steps) but never unbounded in both dimensions at once.
+    s_pad = max(8, num_segments) if interpret \
+        else max(128, -(-num_segments // 128) * 128)
+    if block_n is None:
+        block_n = max(128, min(n, _INTERPRET_MAX_BLOCK,
+                               _ONEHOT_ELEM_BUDGET // s_pad)) \
+            if interpret else 4096
+    bn = min(block_n, max(128, -(-n // 128) * 128))
+    n_pad = -(-max(n, 1) // bn) * bn
+    vals = jnp.pad(vals, ((0, 0), (0, n_pad - n)))
+    seg_ids = jnp.pad(seg_ids, (0, n_pad - n), constant_values=-1)
+
+    out = pl.pallas_call(
+        functools.partial(_segment_reduce_kernel, mode=mode),
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((c, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((c, s_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, s_pad), jnp.float32),
+        compiler_params=_tpu_params(("arbitrary",)),
+        interpret=interpret,
+    )(vals, seg_ids[None, :])
+    return out[:, :num_segments]
+
+
+def segment_reduce(vals, seg_ids, *, num_segments: int, mode: str = "sum",
+                   block_n: int | None = None, interpret: bool = False):
+    """Reduce ``vals`` into ``num_segments`` slots by ``seg_ids`` (n,).
+
+    ``vals`` is ``(n,)`` for one column or ``(C, n)`` for a stack of
+    columns reduced together (one kernel launch for all of them). Segment
+    ids must be in ``[0, num_segments)``; rows with id ``-1`` are ignored.
+    Returns float32 ``(num_segments,)`` / ``(C, num_segments)``.
+    ``mode``: sum | count | min | max.
+    """
+    vals = jnp.asarray(vals, jnp.float32)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32).ravel()
+    squeeze = vals.ndim == 1
+    if squeeze:
+        vals = vals[None, :]
+    out = _segment_reduce_2d(vals, seg_ids, num_segments=num_segments,
+                             mode=mode, block_n=block_n,
+                             interpret=interpret)
+    return out[0] if squeeze else out
+
+
+def segment_reduce_np(vals: np.ndarray, seg_ids: np.ndarray,
+                      num_segments: int, mode: str = "sum") -> np.ndarray:
+    """Pure-numpy oracle for tests."""
+    out = np.full(num_segments, _INIT[mode], dtype=np.float64)
+    if mode in ("sum", "count"):
+        w = np.ones_like(vals) if mode == "count" else vals
+        np.add.at(out, seg_ids, w)
+    elif mode == "min":
+        np.minimum.at(out, seg_ids, vals)
+    else:
+        np.maximum.at(out, seg_ids, vals)
+    return out
+
+
+def _tpu_params(dimension_semantics):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except Exception:
+        return None

@@ -1,0 +1,281 @@
+"""Compiled (jit) engine backend: parity with the interpreted numpy
+backend on the full query suite, the zero-copy shuffle frame format,
+the single-pass radix partitioner, and the Pallas segmented reduction."""
+import numpy as np
+import pytest
+
+from repro.core.storage_service import ObjectStore
+from repro.engine import (columnar, compile as engine_compile, datagen,
+                          operators, queries)
+from repro.engine.columnar import ColumnBatch
+from repro.engine.coordinator import Coordinator
+from repro.engine.worker import (FragmentSpec, execute_fragment,
+                                 radix_partition, result_key, shuffle_key)
+from repro.kernels.segment_reduce import segment_reduce, segment_reduce_np
+
+
+@pytest.fixture(scope="module")
+def loaded_store():
+    store = ObjectStore()
+    keys = {
+        "lineitem": datagen.load_table(store, "lineitem", 20000, 8),
+        "orders": datagen.load_table(store, "orders", 5000, 4),
+        "clickstreams": datagen.load_table(store, "clickstreams", 20000, 6),
+        "item": datagen.load_table(store, "item", 200, 1),
+    }
+    return store, keys
+
+
+def _run(store, keys, backend, plan_fn, query_id, **plan_kwargs):
+    c = Coordinator(store, mode="elastic", backend=backend)
+    for t in ("lineitem", "orders", "clickstreams"):
+        c.register_table(t, keys[t])
+    plan = plan_fn(**plan_kwargs)
+    return c.execute(plan, query_id=f"{query_id}-{backend}")
+
+
+def _sorted_rows(batch: ColumnBatch, key_cols: list[str]):
+    order = np.lexsort([np.asarray(batch[k]) for k in key_cols][::-1])
+    return {k: np.asarray(v)[order] for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# Backend parity on every query in queries.py
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,plan_fn,key_cols", [
+    ("q6", queries.q6_plan, ["revenue"]),
+    ("q1", queries.q1_plan, ["l_returnflag", "l_linestatus"]),
+    ("q12", queries.q12_plan, ["l_shipmode"]),
+])
+def test_backend_parity(loaded_store, name, plan_fn, key_cols):
+    store, keys = loaded_store
+    res = {b: _run(store, keys, b, plan_fn, f"par-{name}")
+           for b in ("numpy", "jit")}
+    a, b = res["numpy"].result, res["jit"].result
+    assert set(a) == set(b)
+    assert a.num_rows == b.num_rows
+    ra, rb = _sorted_rows(a, key_cols), _sorted_rows(b, key_cols)
+    for col in ra:
+        np.testing.assert_allclose(np.asarray(ra[col], np.float64),
+                                   np.asarray(rb[col], np.float64),
+                                   rtol=1e-4)
+
+
+def test_backend_parity_bb_q3(loaded_store):
+    store, keys = loaded_store
+    out = {}
+    for backend in ("numpy", "jit"):
+        c = Coordinator(store, mode="elastic", backend=backend)
+        c.register_table("clickstreams", keys["clickstreams"])
+        plan = queries.bb_q3_plan(keys["item"][0])
+        plan.pipelines[0].fragments = len(keys["clickstreams"])
+        res = c.execute(plan, query_id=f"par-bb-{backend}")
+        out[backend] = dict(zip(res.result["viewed_item"].tolist(),
+                                res.result["views"].tolist()))
+    assert out["numpy"] == out["jit"]
+
+
+def test_run_pipeline_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        engine_compile.run_pipeline(ColumnBatch({}), [], backend="tpu2")
+    with pytest.raises(ValueError):
+        Coordinator(ObjectStore(), backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy frame format
+# ---------------------------------------------------------------------------
+
+def _batch():
+    rng = np.random.default_rng(7)
+    return ColumnBatch({
+        "i64": rng.integers(0, 1 << 40, 257, dtype=np.int64),
+        "f64": rng.standard_normal(257),
+        "i8": rng.integers(0, 3, 257, dtype=np.int8),
+        "f32": rng.standard_normal(257).astype(np.float32),
+    })
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_frame_roundtrip(compress):
+    b = _batch()
+    data = columnar.serialize_frame(b, compress=compress)
+    r = columnar.deserialize(data)
+    assert list(r) == list(b)
+    for k in b:
+        assert r[k].dtype == b[k].dtype
+        np.testing.assert_array_equal(r[k], b[k])
+
+
+def test_frame_roundtrip_empty():
+    assert columnar.deserialize(
+        columnar.serialize_frame(ColumnBatch({}))).num_rows == 0
+    r = columnar.deserialize(columnar.serialize_frame(
+        ColumnBatch({"x": np.asarray([], dtype=np.float64)})))
+    assert r.num_rows == 0 and list(r) == ["x"]
+
+
+def test_frame_projection_pushdown():
+    b = _batch()
+    data = columnar.serialize_frame(b)
+    r = columnar.deserialize(data, ["f64", "i8"])
+    assert list(r) == ["f64", "i8"]
+    np.testing.assert_array_equal(r["f64"], b["f64"])
+    # Uncompressed columns are zero-copy views into the wire buffer.
+    assert not r["f64"].flags.owndata
+
+
+def test_frame_uncompressed_smaller_cpu_bigger_wire():
+    b = _batch()
+    raw = columnar.serialize_frame(b)
+    npz = columnar.serialize(b)
+    # Raw frames trade bytes for decode speed; header stays lightweight.
+    assert len(raw) >= b.nbytes()
+    assert len(raw) < b.nbytes() + 4096
+    assert columnar.deserialize(npz, ["i64"])["i64"].tolist() == \
+        b["i64"].tolist()
+
+
+# ---------------------------------------------------------------------------
+# Radix partitioner
+# ---------------------------------------------------------------------------
+
+def test_radix_partition_matches_per_partition_select():
+    rng = np.random.default_rng(3)
+    batch = ColumnBatch({
+        "key": rng.integers(0, 1000, 5000, dtype=np.int64),
+        "val": rng.standard_normal(5000),
+    })
+    r = 7
+    parts = radix_partition(batch, "key", r)
+    assert len(parts) == r
+    assert sum(p.num_rows for p in parts) == batch.num_rows
+    assign = np.asarray(batch["key"]) % r
+    for i, p in enumerate(parts):
+        ref = batch.select(assign == i)
+        assert p.num_rows == ref.num_rows
+        # Stable argsort keeps row order within a partition.
+        np.testing.assert_array_equal(np.sort(p["val"]), np.sort(ref["val"]))
+        np.testing.assert_array_equal(p["key"], ref["key"])
+        np.testing.assert_array_equal(p["val"], ref["val"])
+
+
+def test_radix_partition_empty():
+    parts = radix_partition(ColumnBatch({}), "key", 4)
+    assert len(parts) == 4 and all(p.num_rows == 0 for p in parts)
+
+
+# ---------------------------------------------------------------------------
+# Empty shuffle partitions are skipped, readers tolerate the gap
+# ---------------------------------------------------------------------------
+
+def test_empty_shuffle_partitions_skipped():
+    store = ObjectStore()
+    batch = ColumnBatch({"key": np.arange(0, 80, 8, dtype=np.int64),
+                         "val": np.arange(10, dtype=np.float64)})
+    store.put("table/t0", columnar.serialize(batch))
+    spec = FragmentSpec(
+        query_id="q", pipeline="p", fragment=0, read_keys=["table/t0"],
+        read_keys2=[], columns=None, ops=[], join=None,
+        output={"type": "shuffle", "partition_by": "key", "partitions": 8})
+    metrics = execute_fragment(store, spec)
+    # Every key is 0 mod 8: one partition written, seven skipped.
+    assert metrics.write_requests == 1
+    assert store.list("shuffle/q/p/") == [shuffle_key("q", "p", 0, 0)]
+
+    consumer = FragmentSpec(
+        query_id="q", pipeline="c", fragment=0,
+        read_keys=[shuffle_key("q", "p", 0, part) for part in range(8)],
+        read_keys2=[], columns=None, ops=[], join=None,
+        output={"type": "collect"}, missing_ok=True)
+    cm = execute_fragment(store, consumer)
+    assert cm.rows_in == batch.num_rows and cm.rows_out == batch.num_rows
+    out = columnar.deserialize(store.get(result_key("q", "c", 0)))
+    np.testing.assert_array_equal(np.sort(out["val"]), batch["val"])
+
+
+def test_hash_agg_high_cardinality_fallback():
+    """Past _MAX_KERNEL_GROUPS the jit agg switches to sort+reduceat and
+    must still match the interpreted backend exactly."""
+    rng = np.random.default_rng(11)
+    n_keys = engine_compile._MAX_KERNEL_GROUPS * 3
+    batch = ColumnBatch({
+        "k": rng.integers(0, n_keys, 20000, dtype=np.int64),
+        "v": rng.standard_normal(20000),
+    })
+    spec = [{"op": "hash_agg", "keys": ["k"],
+             "aggs": [["s", "sum", "v"], ["c", "count", "v"],
+                      ["lo", "min", "v"], ["hi", "max", "v"]]}]
+    a = engine_compile.run_pipeline(batch, spec, backend="numpy")
+    b = engine_compile.run_pipeline(batch, spec, backend="jit")
+    assert a.num_rows == b.num_rows > engine_compile._MAX_KERNEL_GROUPS
+    np.testing.assert_array_equal(a["k"], b["k"])
+    for col in ("s", "c", "lo", "hi"):
+        np.testing.assert_allclose(a[col], b[col], rtol=1e-9)
+
+
+def test_fused_segment_wide_int_fallback():
+    """int64 values beyond int32 range must not be truncated by the jit
+    boundary: the segment falls back to the interpreted path."""
+    big = np.asarray([2**31 + 5, 7, 2**40], dtype=np.int64)
+    batch = ColumnBatch({"k": big, "v": np.asarray([1.0, 2.0, 3.0])})
+    spec = [{"op": "filter", "expr": ["eq", "k", int(big[0])]}]
+    out = engine_compile.run_pipeline(batch, spec, backend="jit")
+    ref = engine_compile.run_pipeline(batch, spec, backend="numpy")
+    assert out.num_rows == ref.num_rows == 1
+    assert out["k"].tolist() == [int(big[0])]
+
+
+def test_fused_wide_const_and_derived_column_fallback():
+    """Wide literal constants and stage-produced wide columns must also
+    route around the int32 jit boundary."""
+    batch = ColumnBatch({"a": np.asarray([65536, 3], dtype=np.int64),
+                         "v": np.asarray([65536, 4], dtype=np.int64)})
+    # Derived int column feeding a later filter in the same segment.
+    spec = [{"op": "project", "columns": ["a", ["p", ["mul", "a", "v"]]]},
+            {"op": "filter", "expr": ["ge", "p", 1]}]
+    out = engine_compile.run_pipeline(batch, spec, backend="jit")
+    ref = engine_compile.run_pipeline(batch, spec, backend="numpy")
+    assert out.num_rows == ref.num_rows == 2
+    np.testing.assert_array_equal(out["p"], ref["p"])
+    # Literal constant beyond int32 in a predicate.
+    spec2 = [{"op": "filter", "expr": ["lt", "a", 10_000_000_000]}]
+    out2 = engine_compile.run_pipeline(batch, spec2, backend="jit")
+    assert out2.num_rows == 2
+
+
+def test_fused_integer_projection_no_overflow():
+    """Derived integer arithmetic must not pass through int32: the
+    projection falls back to interpreted evaluation."""
+    batch = ColumnBatch({"a": np.asarray([100000, 3], dtype=np.int64),
+                         "v": np.asarray([100000, 4], dtype=np.int64)})
+    spec = [{"op": "project", "columns": [["p", ["mul", "a", "v"]]]}]
+    out = engine_compile.run_pipeline(batch, spec, backend="jit")
+    ref = engine_compile.run_pipeline(batch, spec, backend="numpy")
+    assert out["p"].tolist() == ref["p"].tolist() == [10_000_000_000, 12]
+
+
+def test_project_empty_batch_keeps_dtypes():
+    empty = ColumnBatch({"k": np.asarray([], dtype=np.int8),
+                         "v": np.asarray([], dtype=np.float32)})
+    out = operators.op_project(
+        empty, ["k", "v", ["d", ["mul", "v", "v"]], ["z", ["const", 0]]])
+    assert out.num_rows == 0 and list(out) == ["k", "v", "d", "z"]
+    assert out["k"].dtype == np.int8 and out["v"].dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# Pallas segmented reduction vs numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sum", "count", "min", "max"])
+@pytest.mark.parametrize("n,s", [(1000, 6), (4096, 1), (10000, 300), (5, 2)])
+def test_segment_reduce_kernel(mode, n, s):
+    rng = np.random.default_rng(n + s)
+    ids = np.sort(rng.integers(0, s, n)).astype(np.int32)
+    vals = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(segment_reduce(vals, ids, num_segments=s, mode=mode,
+                                    interpret=True))
+    want = segment_reduce_np(vals.astype(np.float64), ids, s, mode)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypo_compat import given, settings, st
 
 from repro.checkpoint import object_store_ckpt as ckpt
 from repro.core import breakeven, token_bucket

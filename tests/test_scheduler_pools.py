@@ -1,7 +1,8 @@
 """Elastic/provisioned pools, stage scheduler, straggler mitigation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypo_compat import given, settings, st
 
 from repro.core.elastic_pool import (ColdStartModel, ElasticPool, FaasLimits,
                                      ProvisionedPool)

@@ -2,7 +2,8 @@
 hypothesis property tests on system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypo_compat import given, settings, st
 
 from repro.core import burst_planner, token_bucket
 from repro.core.partition_scaling import PartitionModel
