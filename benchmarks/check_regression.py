@@ -1,0 +1,115 @@
+"""Benchmark regression gate for the engine data plane.
+
+``python -m benchmarks.check_regression`` checks the recorded speedups in
+``BENCH_engine.json``:
+
+* every ``*speedup*`` entry must be >= 1.0 — an optimized path that runs
+  slower than the path it replaced is a regression, full stop;
+* with a baseline (``--baseline FILE``, or the committed copy via
+  ``git show HEAD:BENCH_engine.json`` when available), every speedup must
+  also stay within ``--tolerance`` (default 0.5, i.e. at least half) of
+  the baseline's recorded value — catching slow decay that stays above
+  1.0. Microbenchmark noise across machines is real, hence the loose
+  default.
+
+Exit code 0 when clean, 1 with a per-metric report otherwise. Use
+``--current FILE`` to gate freshly produced results instead of the
+checked-in file; pass ``--run`` to execute the benchmarks first.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_BENCH = REPO_ROOT / "BENCH_engine.json"
+
+
+def collect_speedups(obj, prefix="") -> dict[str, float]:
+    """All numeric values under keys containing 'speedup', flattened."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (int, float)) and "speedup" in str(k):
+                out[path] = float(v)
+            else:
+                out.update(collect_speedups(v, path))
+    return out
+
+
+def load_committed_baseline() -> dict | None:
+    try:
+        text = subprocess.run(
+            ["git", "show", "HEAD:BENCH_engine.json"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=30, check=True).stdout
+        return json.loads(text)
+    except Exception:
+        return None
+
+
+def check(current: dict, baseline: dict | None,
+          tolerance: float) -> list[str]:
+    failures = []
+    speedups = collect_speedups(current)
+    if not speedups:
+        return ["no speedup entries found in current results"]
+    base_speedups = collect_speedups(baseline) if baseline else {}
+    for name, value in sorted(speedups.items()):
+        if value < 1.0:
+            failures.append(
+                f"{name}: {value:.3f}x < 1.0 — the optimized path lost "
+                "to the path it replaced")
+            continue
+        base = base_speedups.get(name)
+        if base is not None and base > 0 and value < tolerance * base:
+            failures.append(
+                f"{name}: {value:.3f}x dropped below {tolerance:.0%} of "
+                f"the committed baseline ({base:.3f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", type=pathlib.Path, default=DEFAULT_BENCH,
+                    help="results file to gate (default: BENCH_engine.json)")
+    ap.add_argument("--baseline", type=pathlib.Path, default=None,
+                    help="baseline file (default: committed "
+                         "BENCH_engine.json via git, if available)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="minimum fraction of the baseline speedup "
+                         "(default 0.5)")
+    ap.add_argument("--run", action="store_true",
+                    help="run benchmarks.engine_bench first")
+    args = ap.parse_args(argv)
+
+    if args.run:
+        from benchmarks import engine_bench
+        engine_bench.main()
+
+    current = json.loads(args.current.read_text())
+    if args.baseline is not None:
+        baseline = json.loads(args.baseline.read_text())
+    else:
+        baseline = load_committed_baseline()
+
+    failures = check(current, baseline, args.tolerance)
+    speedups = collect_speedups(current)
+    for name, value in sorted(speedups.items()):
+        print(f"  {name}: {value:.3f}x")
+    if failures:
+        print("\nREGRESSIONS:")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"\nok: {len(speedups)} speedup metrics >= 1.0"
+          + (" and within tolerance of baseline" if baseline else
+             " (no baseline available)"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,13 +2,20 @@
 and fused vs interpreted operator execution.
 
 Tracks the hot paths this repo's PRs optimize (the paper's per-worker cost
-is scan/decode + shuffle materialization). Three comparisons:
+is scan/decode + shuffle materialization). Four comparisons:
 
-* serde      — npz (zlib Parquet stand-in) vs zero-copy frame throughput.
-* shuffle    — seed path (per-partition ``select`` rescan + npz) vs the
-               single-pass radix partitioner + raw frames.
-* pipeline   — interpreted numpy operators vs the fused jax.jit backend on
-               a filter+project+hash_agg chain.
+* serde         — npz (zlib Parquet stand-in) vs zero-copy frame
+                  throughput.
+* shuffle       — seed path (per-partition ``select`` rescan + npz) vs the
+                  single-pass radix partitioner + raw frames.
+* pipeline      — interpreted numpy operators vs the fused jax.jit backend
+                  on a filter+project+hash_agg chain.
+* join_pipeline — a Q12-style join fragment (equi-join vs the orders
+                  table, case_in projections, radix shuffle partition):
+                  interpreted op_hash_join + run_pipeline_ops +
+                  radix_partition vs the compiled backend's fused
+                  join->ops->partition tail (one traced call backed by the
+                  Pallas sorted-probe kernel).
 
 ``python -m benchmarks.engine_bench`` writes ``BENCH_engine.json`` at the
 repo root so the perf trajectory is tracked across PRs; ``ALL``/``EXPECT``
@@ -33,6 +40,9 @@ SERDE_ROWS = 500_000
 SHUFFLE_ROWS = 500_000
 SHUFFLE_PARTITIONS = 32
 PIPELINE_ROWS = 2_000_000
+JOIN_PROBE_ROWS = 1_000_000
+JOIN_BUILD_ROWS = 250_000
+JOIN_PARTITIONS = 32
 REPEATS = 9
 
 
@@ -173,9 +183,72 @@ def bench_pipeline() -> dict:
                                             backend="jit"))
     return {
         "rows": batch.num_rows,
+        "batch_mib": batch.nbytes() / MIB,
         "numpy_s": numpy_s, "jit_s": jit_s,
         "numpy_mrows_s": batch.num_rows / numpy_s / 1e6,
         "jit_mrows_s": batch.num_rows / jit_s / 1e6,
+        "speedup": numpy_s / jit_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 4) Q12-style join fragment: interpreted join + ops + radix partition vs
+#    the compiled backend's fused join -> ops -> partition tail
+# ---------------------------------------------------------------------------
+
+# The Q12 join fragment's shape: probe the lineitem shuffle slice against
+# the orders build side (referential keys: every probe row matches, as in
+# TPC-H), derive the priority flags with case_in, and radix-partition the
+# join output by orderkey for the next shuffle.
+URGENT, HIGH, MAIL, SHIP = 0, 1, 2, 5
+
+
+def _join_fragment(rows: int, build_rows: int, seed: int = 3):
+    r = np.random.default_rng(seed)
+    probe = ColumnBatch({
+        "l_orderkey": r.integers(1, build_rows + 1, size=rows,
+                                 dtype=np.int64),
+        "l_shipmode": r.integers(0, 7, size=rows, dtype=np.int8),
+    })
+    build = ColumnBatch({
+        "o_orderkey": r.permutation(np.arange(1, build_rows + 1)
+                                    ).astype(np.int64),
+        "o_orderpriority": r.integers(0, 5, size=build_rows,
+                                      dtype=np.int8),
+    })
+    ops = [
+        {"op": "hash_join", "left_key": "l_orderkey",
+         "right_key": "o_orderkey", "build": build},
+        {"op": "filter", "expr": ["in", "l_shipmode", [MAIL, SHIP]]},
+        {"op": "project", "columns": [
+            "l_orderkey", "l_shipmode",
+            ["high_line", ["case_in", "o_orderpriority", [URGENT, HIGH]]],
+            ["low_line", ["sub1", ["case_in", "o_orderpriority",
+                                   [URGENT, HIGH]]]]]},
+    ]
+    return probe, build, ops
+
+
+def bench_join_pipeline() -> dict:
+    probe, build, ops = _join_fragment(JOIN_PROBE_ROWS, JOIN_BUILD_ROWS)
+    r = JOIN_PARTITIONS
+
+    def run(backend):
+        return engine_compile.run_pipeline_partition(
+            probe, ops, "l_orderkey", r, backend=backend)
+
+    parts_np = run("numpy")     # warm both paths (jit traces on first call)
+    parts_jit = run("jit")
+    rows_out = sum(p.num_rows for p in parts_np)
+    assert rows_out == sum(p.num_rows for p in parts_jit)
+    numpy_s, jit_s = _best_pair(lambda: run("numpy"), lambda: run("jit"))
+    mb = (probe.nbytes() + build.nbytes()) / MIB
+    return {
+        "probe_rows": probe.num_rows, "build_rows": build.num_rows,
+        "rows_out": rows_out, "partitions": r, "batch_mib": mb,
+        "numpy_s": numpy_s, "jit_s": jit_s,
+        "numpy_mrows_s": probe.num_rows / numpy_s / 1e6,
+        "jit_mrows_s": probe.num_rows / jit_s / 1e6,
         "speedup": numpy_s / jit_s,
     }
 
@@ -185,14 +258,20 @@ def bench_pipeline() -> dict:
 # ---------------------------------------------------------------------------
 
 def run_all() -> dict:
-    # Pipeline first: it is the most allocation-sensitive comparison and
-    # the npz benches below churn hundreds of MB through the allocator.
-    return {"pipeline": bench_pipeline(), "serde": bench_serde(),
+    # Pipeline benches first: they are the most allocation-sensitive
+    # comparisons and the npz benches below churn hundreds of MB through
+    # the allocator.
+    return {"pipeline": bench_pipeline(),
+            "join_pipeline": bench_join_pipeline(),
+            "serde": bench_serde(),
             "shuffle": bench_shuffle(),
             "config": {"serde_rows": SERDE_ROWS,
                        "shuffle_rows": SHUFFLE_ROWS,
                        "shuffle_partitions": SHUFFLE_PARTITIONS,
                        "pipeline_rows": PIPELINE_ROWS,
+                       "join_probe_rows": JOIN_PROBE_ROWS,
+                       "join_build_rows": JOIN_BUILD_ROWS,
+                       "join_partitions": JOIN_PARTITIONS,
                        "repeats": REPEATS}}
 
 
@@ -200,6 +279,7 @@ def engine_data_plane():
     """benchmarks.run hook: (name, us_per_call, derived) rows."""
     results = run_all()
     sh, pp, sd = results["shuffle"], results["pipeline"], results["serde"]
+    jp = results["join_pipeline"]
     return [
         ("engine/frame_deser_speedup", 0.0, sd["deser_speedup"]),
         ("engine/shuffle_seed_mib_s", sh["seed_s"] * 1e6, sh["seed_mib_s"]),
@@ -211,6 +291,10 @@ def engine_data_plane():
         ("engine/pipeline_jit_mrows_s", pp["jit_s"] * 1e6,
          pp["jit_mrows_s"]),
         ("engine/fused_pipeline_speedup", 0.0, pp["speedup"]),
+        ("engine/join_numpy_mrows_s", jp["numpy_s"] * 1e6,
+         jp["numpy_mrows_s"]),
+        ("engine/join_jit_mrows_s", jp["jit_s"] * 1e6, jp["jit_mrows_s"]),
+        ("engine/fused_join_pipeline_speedup", 0.0, jp["speedup"]),
     ]
 
 
@@ -218,6 +302,7 @@ EXPECT = {
     # PR acceptance floors; ceilings are generous (hardware-dependent).
     "engine/shuffle_speedup": (3.0, 1000.0),
     "engine/fused_pipeline_speedup": (1.5, 1000.0),
+    "engine/fused_join_pipeline_speedup": (1.5, 1000.0),
 }
 
 ALL = [engine_data_plane]

@@ -1,0 +1,76 @@
+"""Measured data-plane throughputs from ``BENCH_engine.json``.
+
+``benchmarks/engine_bench.py`` records what this machine actually
+sustains on the engine hot paths (fused vs interpreted pipelines, the
+join+partition data plane, serde). The coordinator's fragment-duration
+model and the burst planner prefer those measurements over the hand-set
+``CPU_BYTES_PER_S_BY_BACKEND`` constants; every accessor degrades
+gracefully to the caller's fallback when the file is absent, stale, or
+malformed (fresh checkouts, CI sandboxes).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import pathlib
+from typing import Optional
+
+MIB = 1024.0 ** 2
+
+_ENV_VAR = "REPRO_BENCH_PROFILE"
+
+
+def _candidates() -> list[pathlib.Path]:
+    out = []
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        out.append(pathlib.Path(env))
+    out.append(pathlib.Path.cwd() / "BENCH_engine.json")
+    # src/repro/core/bench_profile.py -> repo root
+    out.append(pathlib.Path(__file__).resolve().parents[3]
+               / "BENCH_engine.json")
+    return out
+
+
+@functools.lru_cache(maxsize=8)
+def _load_cached(path_key: Optional[str]) -> dict:
+    paths = [pathlib.Path(path_key)] if path_key else _candidates()
+    for p in paths:
+        try:
+            with open(p) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                return data
+        except (OSError, ValueError):
+            continue
+    return {}
+
+
+def load(path: Optional[str] = None) -> dict:
+    """The parsed benchmark profile, or ``{}`` when unavailable."""
+    return _load_cached(str(path) if path is not None else None)
+
+
+def clear_cache() -> None:
+    _load_cached.cache_clear()
+
+
+def cpu_bytes_per_s(backend: str, fallback: float,
+                    path: Optional[str] = None) -> float:
+    """Measured pipeline scan/decode throughput (bytes/s) for an engine
+    backend, from the ``pipeline`` section; ``fallback`` otherwise."""
+    pipe = load(path).get("pipeline", {})
+    mib = pipe.get("batch_mib")
+    secs = pipe.get({"numpy": "numpy_s", "jit": "jit_s"}.get(backend))
+    if not mib or not secs or secs <= 0:
+        return fallback
+    return float(mib) * MIB / float(secs)
+
+
+def shuffle_bytes_per_s(fallback: float,
+                        path: Optional[str] = None) -> float:
+    """Measured radix partition+serialize throughput (bytes/s)."""
+    sh = load(path).get("shuffle", {})
+    v = sh.get("radix_mib_s")
+    return float(v) * MIB if v else fallback

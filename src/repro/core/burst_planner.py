@@ -35,12 +35,16 @@ class ScanPlan:
 def plan_scan(total_bytes: float, partition_bytes: float,
               max_workers: int,
               bucket: token_bucket.TokenBucketConfig = token_bucket.LAMBDA_INBOUND,
-              io_efficiency: float = 0.75) -> ScanPlan:
+              io_efficiency: float = 0.75,
+              cpu_bytes_per_s: Optional[float] = None) -> ScanPlan:
     """Choose worker count so per-worker input fits the burst budget.
 
     ``io_efficiency`` models S3 request handling + decompression overhead vs
     the raw network model (the gap between the model and I/O-stack curves in
-    Fig 14).
+    Fig 14). ``cpu_bytes_per_s`` optionally adds the worker's measured
+    scan/decode throughput (``core.bench_profile``, fed from
+    BENCH_engine.json) to the expected scan time; callers without a
+    measurement leave it None and get the pure network model.
     """
     n_parts = max(1, math.ceil(total_bytes / max(partition_bytes, 1.0)))
     budget = token_bucket.burst_budget_bytes(bucket)
@@ -49,10 +53,13 @@ def plan_scan(total_bytes: float, partition_bytes: float,
     ppw = math.ceil(n_parts / workers)
     bpw = ppw * partition_bytes
     bw = token_bucket.effective_throughput(bpw, bucket) * io_efficiency
+    scan_s = bpw / bw
+    if cpu_bytes_per_s:
+        scan_s += bpw / cpu_bytes_per_s
     return ScanPlan(workers=workers, partitions_per_worker=ppw,
                     bytes_per_worker=bpw, within_burst=bpw <= budget,
                     expected_bw_per_worker=bw,
-                    expected_scan_s=bpw / bw)
+                    expected_scan_s=scan_s)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,6 +10,20 @@ specs into fused kernels:
   referenced columns — no per-node numpy temporaries), rows compact once
   per mask (one gather per column), and each projection's derived columns
   evaluate in one fused computation over the already-compacted rows.
+* ``hash_join`` (plus every following ``filter``/``project``, plus the
+  shuffle's radix partition assignment when the run reaches the fragment
+  output) lowers into ONE traced function (``_FusedTail``): the Pallas
+  sorted-probe kernel (``kernels.hash_join``) locates each probe key in
+  the argsorted build side, downstream predicates AND into the join's
+  match mask with no intermediate materialization, derived projections
+  evaluate over the probed columns, and the shuffle ``key % r`` partition
+  assignment is computed in the same trace. The only numpy steps are the
+  ones XLA's CPU backend loses badly on — the final stable partition
+  permutation (np.argsort is a radix sort here, ~7x faster than XLA's
+  sort) and the per-column output gathers, which also keep pass-through
+  columns in their original dtype (no f64->f32 round-trip for data the
+  trace never computes on). Each output column is gathered exactly once;
+  the writer receives contiguous per-partition slices.
 * ``hash_agg`` lexsorts the group keys and hands the aggregate columns to
   the Pallas segmented-reduction kernel (``kernels.segment_reduce``),
   stacked so all same-mode aggregates reduce in a single kernel launch —
@@ -17,6 +31,14 @@ specs into fused kernels:
   ``kernels/ops.py``.
 * ``udf`` operators fall back to the numpy implementations (they carry
   non-JSON broadcast arrays and data-dependent shapes).
+
+Fragments call ``run_pipeline_partition`` so the shuffle partition fuses
+into the trailing compiled segment on the jit backend; the numpy backend
+keeps the interpreted operators plus ``operators.radix_partition`` as the
+semantic reference. Joins whose key or referenced columns overflow the
+int32 jit boundary, and build sides with duplicate keys (the compiled
+probe returns one position per key), fall back to ``op_hash_join`` with
+identical semantics.
 
 Compiled segments are cached on the JSON text of their specs, so the many
 fragments of one pipeline share a single compilation.
@@ -45,6 +67,7 @@ import numpy as np
 
 from repro.engine import operators
 from repro.engine.columnar import ColumnBatch
+from repro.kernels import hash_join as hj_kernel
 from repro.kernels.segment_reduce import segment_reduce
 
 
@@ -304,6 +327,343 @@ def _run_fused(batch: ColumnBatch, segment: list[dict]) -> ColumnBatch:
 
 
 # ---------------------------------------------------------------------------
+# Fused join -> ops -> partition tail
+# ---------------------------------------------------------------------------
+#
+# A tail is ``[hash_join?] + (filter|project)*`` optionally terminated by
+# the fragment's shuffle partition. One traced function computes the probe
+# (Pallas sorted-probe kernel over the argsorted build side), the fused
+# predicate mask, every derived projection, and the radix partition
+# assignment (``r`` = dead-row sentinel for unmatched/filtered rows); the
+# host then derives the stable partition permutation with one radix
+# argsort and gathers each surviving output column exactly once — from
+# the ORIGINAL arrays for pass-through columns (dtype preserved) and from
+# the trace outputs for derived ones.
+
+def _int_valued_sim(expr, int_kinds: dict) -> bool:
+    """``operators``-free mirror of ``_int_valued`` over a simulated
+    schema (column name -> is-integer-kind)."""
+    if isinstance(expr, str):
+        return int_kinds[expr]
+    op = expr[0]
+    if op == "const":
+        return isinstance(expr[1], (int, np.integer)) \
+            and not isinstance(expr[1], bool)
+    if op in ("mul", "add"):
+        return _int_valued_sim(expr[1], int_kinds) \
+            and _int_valued_sim(expr[2], int_kinds)
+    return False
+
+
+class _FusedTail:
+    """Compiled ``[hash_join?] + (filter|project)*`` (+ optional radix
+    partition) — see the section comment above."""
+
+    def __init__(self, segment: list[dict], partition):
+        self.segment = segment
+        self.partition = partition           # (key_col, partitions) | None
+        self.join = segment[0] if segment and segment[0]["op"] == "hash_join" \
+            else None
+        self.ops = segment[1:] if self.join else segment
+        consts: list = []
+        for op in self.ops:
+            if op["op"] == "filter":
+                _expr_consts(op["expr"], consts)
+            else:
+                for c in op["columns"]:
+                    if not isinstance(c, str):
+                        _value_consts(c[1], consts)
+        self._wide_consts = _any_wide_int(consts)
+        self._seen_probe: set = set()
+        self._seen_build: set = set()
+        self._fns: dict = {}
+
+    # -- plan analysis (per input schema) ----------------------------------
+    def _resolve_needed(self, left_names, right_names):
+        """Walk the ops over a name-level schema. Returns
+        ``(final_sources, left_in, right_in)``: the origin of every final
+        output column ('left'|'right'|'derived'|'const') and the concrete
+        left/right columns the traced function must receive (expression
+        references plus the join and partition keys); derived columns are
+        recomputed inside the trace in op order."""
+        left_in, right_in = set(), set()
+        sources = {c: ("left", c) for c in left_names}
+        if self.join:
+            left_in.add(self.join["left_key"])
+            for c in right_names:
+                if c != self.join["right_key"]:
+                    sources[c] = ("right", c)
+        # A needed name resolves against the schema at its reference
+        # point; walking ops in order and resolving eagerly is equivalent
+        # because project() rebinds names before later references.
+        for op in self.ops:
+            if op["op"] == "filter":
+                for r in _expr_refs(op["expr"], set()):
+                    src = sources[r]
+                    if src[0] == "left":
+                        left_in.add(src[1])
+                    elif src[0] == "right":
+                        right_in.add(src[1])
+            else:
+                new = {}
+                for c in op["columns"]:
+                    if isinstance(c, str):
+                        new[c] = sources[c]
+                    else:
+                        name, expr = c[0], c[1]
+                        for r in _value_refs(expr, set()):
+                            src = sources[r]
+                            if src[0] == "left":
+                                left_in.add(src[1])
+                            elif src[0] == "right":
+                                right_in.add(src[1])
+                        new[name] = ("derived", expr) \
+                            if _value_refs(expr, set()) else ("const", expr)
+                sources = new
+        if self.partition is not None:
+            src = sources[self.partition[0]]
+            if src[0] == "left":
+                left_in.add(src[1])
+            elif src[0] == "right":
+                right_in.add(src[1])
+        return sources, sorted(left_in), sorted(right_in)
+
+    # -- guards -------------------------------------------------------------
+    def _must_fall_back(self, batch, build, left_in, right_in,
+                        final_sources) -> bool:
+        if self._wide_consts:
+            return True
+        if batch.num_rows == 0 or not len(batch):
+            return True
+        if self.join is not None:
+            if build.num_rows == 0 or not len(build):
+                return True
+            lk = np.asarray(batch[self.join["left_key"]])
+            rk = np.asarray(build[self.join["right_key"]])
+            if lk.dtype.kind not in "iu" or rk.dtype.kind not in "iu":
+                return True
+            if _overflows_int32(lk) or _overflows_int32(rk):
+                return True
+        for c in left_in:
+            if _overflows_int32(np.asarray(batch[c])):
+                return True
+        for c in right_in:
+            if _overflows_int32(np.asarray(build[c])):
+                return True
+        # Derived integer arithmetic would narrow to int32 (mirrors
+        # _ProjectStage's guard) — simulate dtype kinds through the ops.
+        int_kinds = {c: np.asarray(v).dtype.kind in "iu"
+                     for c, v in batch.items()}
+        if self.join is not None:
+            for c, v in build.items():
+                if c != self.join["right_key"]:
+                    int_kinds[c] = np.asarray(v).dtype.kind in "iu"
+        for op in self.ops:
+            if op["op"] != "project":
+                continue
+            kinds = {}
+            for c in op["columns"]:
+                if isinstance(c, str):
+                    kinds[c] = int_kinds[c]
+                else:
+                    name, expr = c[0], c[1]
+                    iv = _int_valued_sim(expr, int_kinds)
+                    if iv and _value_refs(expr, set()):
+                        return True
+                    kinds[name] = iv
+            int_kinds = kinds
+        if self.partition is not None:
+            src = final_sources[self.partition[0]]
+            if src[0] == "const":
+                v = operators.eval_value(src[1], ColumnBatch({}))
+                if np.asarray(v).dtype.kind not in "iu":
+                    return True
+            elif not int_kinds[self.partition[0]]:
+                return True   # numpy truncates float keys; keep its path
+        return False
+
+    def _numpy_tail(self, batch, build):
+        if self.join is not None:
+            batch = operators.op_hash_join(batch, build,
+                                           self.join["left_key"],
+                                           self.join["right_key"])
+        batch = operators.run_pipeline_ops(batch, self.ops)
+        if self.partition is not None:
+            return operators.radix_partition(batch, self.partition[0],
+                                             self.partition[1])
+        return batch
+
+    # -- traced function ----------------------------------------------------
+    def _build_fn(self, sources, left_in, right_in, needs_pos):
+        ops = self.ops
+        join = self.join
+        partition = self.partition
+        derived_out = sorted(n for n, s in sources.items()
+                             if s[0] == "derived")
+
+        @functools.partial(jax.jit, static_argnames=("iters", "r"))
+        def fn(left_cols, bkeys, bpayload, scalars, starts, n_valid,
+               *, iters, r):
+            n = next(iter(left_cols.values())).shape[0]
+            valid = jnp.arange(n, dtype=jnp.int32) < n_valid
+            env = dict(left_cols)
+            pos = None
+            if join is not None:
+                pos, match = hj_kernel.sorted_probe(
+                    bkeys, env[join["left_key"]].astype(jnp.int32),
+                    scalars=scalars, starts=starts, iters=iters,
+                    interpret=_interpret())
+                match = match & valid
+                for c in right_in:
+                    env[c] = bpayload[c][pos]
+            else:
+                match = valid
+            for op in ops:
+                if op["op"] == "filter":
+                    match = match & operators.eval_expr(op["expr"], env,
+                                                        xp=jnp)
+                else:
+                    new = dict(env)    # keep shadowed inputs reachable for
+                    for c in op["columns"]:            # later env lookups
+                        if not isinstance(c, str):
+                            v = operators.eval_value(c[1], env, xp=jnp)
+                            new[c[0]] = jnp.broadcast_to(v, (n,)) \
+                                if v.ndim == 0 else v
+                    env = new
+            if partition is not None:
+                key, nparts = partition[0], partition[1]
+                src = sources[key]
+                if src[0] == "const":
+                    kv = int(np.asarray(
+                        operators.eval_value(src[1], ColumnBatch({}))))
+                    assign = jnp.where(match, kv % nparts, nparts)
+                else:
+                    assign = jnp.where(
+                        match, env[key].astype(jnp.int32) % nparts, nparts)
+            else:
+                assign = jnp.where(match, 0, 1)
+            out = {name: env[name] for name in derived_out}
+            res = (assign.astype(jnp.int32), out)
+            return res + ((pos,) if needs_pos else ())
+
+        return fn
+
+    # -- execution ----------------------------------------------------------
+    def run(self, batch: ColumnBatch, build):
+        left_names = list(batch)
+        right_names = list(build) if build is not None else []
+        final_sources, left_in, right_in = self._resolve_needed(
+            left_names, right_names)
+        traced_work = self.join is not None \
+            or any(op["op"] == "filter" for op in self.ops) \
+            or any(s[0] == "derived" for s in final_sources.values())
+        if not traced_work or not left_in:
+            return self._numpy_tail(batch, build)
+        if self._must_fall_back(batch, build, left_in, right_in,
+                                final_sources):
+            return self._numpy_tail(batch, build)
+
+        n = batch.num_rows
+        r = self.partition[1] if self.partition is not None else 1
+        needs_pos = any(s[0] == "right" for s in final_sources.values())
+
+        # Host-side build prep: argsort + bucket index for the probe.
+        bkeys_pad = scalars = starts = None
+        bpay_sorted: dict = {}
+        bpay_out: dict = {}
+        iters = 0
+        if self.join is not None:
+            rkeys = np.asarray(build[self.join["right_key"]])
+            border = np.argsort(rkeys, kind="stable")
+            bs = rkeys[border].astype(np.int32)
+            if bs[1:].size and np.any(bs[1:] == bs[:-1]):
+                # Duplicate build keys: the probe returns one position per
+                # key; the expansion semantics live in op_hash_join.
+                return self._numpy_tail(batch, build)
+            scalars, starts, iters = hj_kernel.prepare_buckets(bs)
+            s = len(bs)
+            s_pad = s if s in self._seen_build or \
+                len(self._seen_build) < _MAX_RAW_SHAPES else _pow2(s)
+            self._seen_build.add(s)
+            if s_pad > s:
+                bs = np.concatenate(
+                    [bs, np.full(s_pad - s, hj_kernel._INT32_MAX,
+                                 np.int32)])
+            bkeys_pad = bs
+            # One gather per needed payload column: the unpadded sorted
+            # copy serves the host-side pass-through outputs (original
+            # dtype preserved), a padded view of the same array feeds the
+            # trace.
+            out_cols = {src[1] for src in final_sources.values()
+                        if src[0] == "right"}
+            for c in sorted(set(right_in) | out_cols):
+                v = np.asarray(build[c])[border]
+                if c in out_cols:
+                    bpay_out[c] = v
+                if c in right_in:
+                    bpay_sorted[c] = v if s_pad == s else np.concatenate(
+                        [v, np.zeros(s_pad - s, v.dtype)])
+
+        left_cols, _ = _bounded_shape(
+            {c: np.asarray(batch[c]) for c in left_in}, n, self._seen_probe)
+
+        key = (tuple(left_names), tuple(right_names), needs_pos)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._build_fn(final_sources, left_in, right_in, needs_pos)
+            self._fns[key] = fn
+        res = fn(left_cols, bkeys_pad, bpay_sorted, scalars, starts,
+                 np.int32(n), iters=iters, r=r)
+        assign = np.asarray(res[0])[:n]
+        derived = {name: v for name, v in res[1].items()}
+        pos = np.asarray(res[2])[:n] if needs_pos else None
+
+        # Host: one radix argsort for the stable partition permutation,
+        # then exactly one gather per output column.
+        lividx = np.flatnonzero(assign < r)
+        if r == 1:
+            order = lividx            # single bucket: already in order
+            counts = np.asarray([len(lividx)])
+        else:
+            order = lividx[np.argsort(assign[lividx], kind="stable")]
+            counts = np.bincount(assign[lividx], minlength=r)
+        out = {}
+        for name, src in final_sources.items():
+            if src[0] == "left":
+                out[name] = np.asarray(batch[src[1]])[order]
+            elif src[0] == "right":
+                out[name] = bpay_out[src[1]][pos[order]]
+            elif src[0] == "derived":
+                out[name] = np.asarray(derived[name])[:n][order]
+            else:   # const: numpy dtype semantics (np.full of a scalar)
+                out[name] = np.full(len(order), np.asarray(
+                    operators.eval_value(src[1], ColumnBatch({}))))
+        if self.partition is None:
+            return ColumnBatch(out)
+        bounds = np.concatenate(([0], np.cumsum(counts)))
+        return [ColumnBatch({k: v[bounds[p]:bounds[p + 1]]
+                             for k, v in out.items()})
+                for p in range(r)]
+
+
+@functools.lru_cache(maxsize=256)
+def _compile_tail(segment_json: str, partition) -> _FusedTail:
+    return _FusedTail(json.loads(segment_json), partition)
+
+
+def _strip_build(op: dict) -> dict:
+    return {k: v for k, v in op.items() if k != "build"}
+
+
+def _run_tail(batch: ColumnBatch, segment: list[dict], partition):
+    build = segment[0].get("build") if segment and \
+        segment[0]["op"] == "hash_join" else None
+    tail = _compile_tail(json.dumps([_strip_build(op) for op in segment]),
+                         partition)
+    return tail.run(batch, build)
+
+
+# ---------------------------------------------------------------------------
 # hash_agg over the Pallas segmented reduction
 # ---------------------------------------------------------------------------
 
@@ -388,6 +748,15 @@ def run_pipeline_jit(batch: ColumnBatch, ops: list[dict]) -> ColumnBatch:
                 j += 1
             batch = _run_fused(batch, ops[i:j])
             i = j
+        elif kind == "hash_join":
+            # The join and every following filter/project trace together:
+            # predicates AND into the probe's match mask, so the join
+            # output compacts once, after all of them.
+            j = i + 1
+            while j < len(ops) and ops[j]["op"] in ("filter", "project"):
+                j += 1
+            batch = _run_tail(batch, ops[i:j], None)
+            i = j
         elif kind == "hash_agg":
             batch = _run_hash_agg(batch, ops[i]["keys"], ops[i]["aggs"])
             i += 1
@@ -398,6 +767,40 @@ def run_pipeline_jit(batch: ColumnBatch, ops: list[dict]) -> ColumnBatch:
         else:
             raise ValueError(f"unknown operator {kind!r}")
     return batch
+
+
+def _fusable_tail_start(ops: list[dict]) -> int:
+    """Index where the trailing ``[hash_join?] + (filter|project)*`` run
+    begins (``len(ops)`` when the pipeline ends in an agg/udf)."""
+    t = len(ops)
+    while t > 0 and ops[t - 1]["op"] in ("filter", "project"):
+        t -= 1
+    if t > 0 and ops[t - 1]["op"] == "hash_join":
+        t -= 1
+    return t
+
+
+def run_pipeline_partition(batch: ColumnBatch, ops: list[dict],
+                           key_col: str, partitions: int,
+                           backend: str = "numpy") -> list[ColumnBatch]:
+    """Execute a pipeline spec and radix-partition its output for a
+    shuffle write, returning ``partitions`` contiguous ColumnBatches.
+
+    On the jit backend the trailing ``[hash_join?] + (filter|project)*``
+    run and the partition assignment compile into one traced call (see
+    ``_FusedTail``); the numpy backend is the interpreted reference:
+    ``run_pipeline_ops`` + ``operators.radix_partition``.
+    """
+    if backend == "numpy":
+        return operators.radix_partition(
+            operators.run_pipeline_ops(batch, ops), key_col, partitions)
+    if backend != "jit":
+        raise ValueError(f"unknown backend {backend!r}")
+    t = _fusable_tail_start(ops)
+    batch = run_pipeline_jit(batch, ops[:t])
+    if t == len(ops):
+        return operators.radix_partition(batch, key_col, partitions)
+    return _run_tail(batch, ops[t:], (key_col, partitions))
 
 
 BACKENDS = {

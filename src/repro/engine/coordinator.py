@@ -15,7 +15,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import burst_planner, pricing, token_bucket
+from repro.core import bench_profile, burst_planner, pricing, token_bucket
 from repro.core.elastic_pool import ColdStartModel, ElasticPool, ProvisionedPool
 from repro.core.scheduler import Fragment, Stage, StageScheduler, StragglerPolicy
 from repro.core.storage_service import ObjectStore, RequestStats
@@ -29,12 +29,19 @@ WORKER_VCPUS = 4
 WORKER_MEM_GIB = 7076.0 / 1024.0
 CPU_BYTES_PER_S = 600e6 * WORKER_VCPUS / 4   # scan+decode throughput
 # The fused/jit backend removes per-node temporaries and the per-partition
-# shuffle rescan, so a worker sustains a higher scan+decode rate (measured
-# by benchmarks/engine_bench.py; conservative constant here).
+# shuffle rescan, so a worker sustains a higher scan+decode rate. These
+# hand-set constants are the graceful fallback; when BENCH_engine.json is
+# present, ``_cpu_bytes_per_s`` prefers the throughput this machine
+# actually measured (``core.bench_profile``).
 CPU_BYTES_PER_S_BY_BACKEND = {
     "numpy": CPU_BYTES_PER_S,
     "jit": 2.5 * CPU_BYTES_PER_S,
 }
+
+
+def _cpu_bytes_per_s(backend: str) -> float:
+    return bench_profile.cpu_bytes_per_s(
+        backend, CPU_BYTES_PER_S_BY_BACKEND[backend])
 IO_THREADS = 32
 S3_READ_MEDIAN_S = 0.027
 S3_WRITE_MEDIAN_S = 0.040
@@ -93,7 +100,10 @@ class Coordinator:
                 ) -> QueryResult:
         query_id = query_id or plan.name
         stats_before = dataclasses.replace(self.store.stats)
-        stages, frag_counts = self._compile(plan, query_id)
+        # Per-query shuffle bitmap registry: writers record which
+        # partitions they produced, missing_ok readers validate absences.
+        registry = worker.ShuffleRegistry()
+        stages, frag_counts = self._compile(plan, query_id, registry)
         results = self.scheduler.run(stages)
 
         # Merge collected fragments of the terminal pipeline.
@@ -128,7 +138,8 @@ class Coordinator:
             stage_node_seconds=stage_nodes)
 
     # ------------------------------------------------------------------
-    def _compile(self, plan: QueryPlan, query_id: str
+    def _compile(self, plan: QueryPlan, query_id: str,
+                 registry: Optional[worker.ShuffleRegistry] = None
                  ) -> tuple[list[Stage], dict[str, int]]:
         frag_counts: dict[str, int] = {}
         stages: list[Stage] = []
@@ -143,7 +154,8 @@ class Coordinator:
                 est, in_bytes = self._estimate(spec)
                 fragments.append(Fragment(
                     fragment_id=i,
-                    work=lambda s=spec: worker.execute_fragment(self.store, s),
+                    work=lambda s=spec: worker.execute_fragment(
+                        self.store, s, registry=registry),
                     est_duration_s=est, input_bytes=in_bytes))
             stages.append(Stage(pipe.name, fragments, deps=pipe.deps()))
         return stages, frag_counts
@@ -158,9 +170,10 @@ class Coordinator:
                 n = min(pipe.fragments, len(keys))
             elif self.burst_aware:
                 # Paper Fig 14: keep each worker's scan inside its burst.
-                sp = burst_planner.plan_scan(part_bytes * len(keys),
-                                             part_bytes, self.max_workers,
-                                             bucket=self.bucket)
+                sp = burst_planner.plan_scan(
+                    part_bytes * len(keys), part_bytes, self.max_workers,
+                    bucket=self.bucket,
+                    cpu_bytes_per_s=_cpu_bytes_per_s(self.backend))
                 n = sp.workers
             else:
                 n = max(1, math.ceil(len(keys) / 4))
@@ -215,7 +228,7 @@ class Coordinator:
         reads = len(spec.read_keys) + len(spec.read_keys2)
         net = token_bucket.transfer_time(float(in_bytes), self.bucket)
         req = reads * S3_READ_MEDIAN_S / IO_THREADS + S3_WRITE_MEDIAN_S
-        cpu_bw = CPU_BYTES_PER_S_BY_BACKEND[self.backend]
+        cpu_bw = _cpu_bytes_per_s(self.backend)   # measured when available
         cpu = 2.0 * in_bytes / cpu_bw  # ~2x decompression expansion
         return net + req + cpu + 0.02, float(in_bytes)
 

@@ -159,8 +159,12 @@ def op_hash_agg(batch: ColumnBatch, keys: list[str],
 
 def op_hash_join(left: ColumnBatch, right: ColumnBatch, left_key: str,
                  right_key: str) -> ColumnBatch:
-    """Inner equi-join; right side is the build side (unique keys assumed,
-    as for TPC-H orders.o_orderkey)."""
+    """Inner equi-join; right side is the build side. Duplicate build keys
+    expand: every probe row pairs with every matching build row (matches
+    emitted in build sort order, probe rows kept in probe order), the
+    standard SQL inner-join multiplicity. The compiled backend mirrors
+    these semantics (it falls back to this implementation when the build
+    side has duplicates)."""
     if left.num_rows == 0 or right.num_rows == 0:
         cols = {k: np.asarray([]) for k in left}
         cols.update({k: np.asarray([]) for k in right if k != right_key})
@@ -169,16 +173,48 @@ def op_hash_join(left: ColumnBatch, right: ColumnBatch, left_key: str,
     order = np.argsort(rkeys, kind="stable")
     rsorted = rkeys[order]
     lkeys = np.asarray(left[left_key])
-    pos = np.searchsorted(rsorted, lkeys)
-    pos = np.clip(pos, 0, len(rsorted) - 1)
-    match = rsorted[pos] == lkeys
-    lsel = np.flatnonzero(match)
-    rsel = order[pos[match]]
+    if rsorted[1:].size and np.any(rsorted[1:] == rsorted[:-1]):
+        # Duplicate build keys: expand each probe row by its match count.
+        lo = np.searchsorted(rsorted, lkeys, side="left")
+        hi = np.searchsorted(rsorted, lkeys, side="right")
+        counts = hi - lo
+        total = int(counts.sum())
+        lsel = np.repeat(np.arange(len(lkeys)), counts)
+        starts = np.cumsum(counts) - counts         # exclusive prefix
+        rpos = np.arange(total) - np.repeat(starts, counts) \
+            + np.repeat(lo, counts)
+        rsel = order[rpos]
+    else:
+        # Unique build keys: single lower-bound probe.
+        pos = np.searchsorted(rsorted, lkeys)
+        pos = np.clip(pos, 0, len(rsorted) - 1)
+        match = rsorted[pos] == lkeys
+        lsel = np.flatnonzero(match)
+        rsel = order[pos[match]]
     cols = {k: np.asarray(v)[lsel] for k, v in left.items()}
     for k, v in right.items():
         if k != right_key:
             cols[k] = np.asarray(v)[rsel]
     return ColumnBatch(cols)
+
+
+def radix_partition(batch: ColumnBatch, key_col: str, partitions: int
+                    ) -> list[ColumnBatch]:
+    """Single-pass shuffle partitioner. Returns ``partitions`` batches,
+    the i-th holding the rows with ``key % partitions == i`` (empty batches
+    share the reordered arrays via zero-length views)."""
+    if batch.num_rows == 0:
+        return [batch] * partitions
+    assign = np.asarray(batch[key_col]).astype(np.int64) % partitions
+    order = np.argsort(assign, kind="stable")
+    counts = np.bincount(assign, minlength=partitions)
+    bounds = np.concatenate(([0], np.cumsum(counts)))
+    reordered = {k: np.asarray(v)[order] for k, v in batch.items()}
+    out = []
+    for p in range(partitions):
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        out.append(ColumnBatch({k: v[lo:hi] for k, v in reordered.items()}))
+    return out
 
 
 # UDF registry (TPCx-BB Q3 style map-side session analysis).
@@ -243,6 +279,11 @@ def run_pipeline_ops(batch: ColumnBatch, ops: list[dict]) -> ColumnBatch:
             batch = op_project(batch, spec["columns"])
         elif kind == "hash_agg":
             batch = op_hash_agg(batch, spec["keys"], spec["aggs"])
+        elif kind == "hash_join":
+            # Build side is resolved by the worker into the op spec (it is
+            # a runtime input, not part of the JSON plan).
+            batch = op_hash_join(batch, spec["build"], spec["left_key"],
+                                 spec["right_key"])
         elif kind == "udf":
             batch = op_udf(batch, spec["name"], **spec.get("kwargs", {}))
         else:

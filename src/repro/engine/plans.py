@@ -2,9 +2,30 @@
 
 A plan is a list of pipelines; each pipeline reads either base-table
 partitions or the shuffle output of upstream pipelines, applies a chain of
-vectorized operators (optionally after an equi-join of two shuffle inputs),
-and either reshuffles or collects its output. The coordinator decides
-fragment counts (data parallelism) per pipeline at compile time.
+vectorized operators, and either reshuffles or collects its output. The
+coordinator decides fragment counts (data parallelism) per pipeline at
+compile time.
+
+Join-as-op pipeline spec: an equi-join is an ordinary entry in ``ops`` —
+
+    {"op": "hash_join", "left_key": "<probe col>", "right_key": "<build col>"}
+
+with the build side declared by the pipeline's ``input2`` (a ShuffleInput
+partitioned the same way as ``input``). The worker resolves the build-side
+read into the op spec at runtime (a ``"build"`` ColumnBatch, never part of
+the JSON), and the execution backends treat the join like any other
+pipeline op: the numpy backend interprets ``operators.op_hash_join``
+(duplicate build keys expand, SQL inner-join multiplicity); the jit
+backend traces the join probe, every following filter/project, and — when
+the run reaches a shuffle output — the radix partition assignment as one
+compiled call (``engine_compile._FusedTail``). The legacy ``Pipeline.join``
+field (``{left_key, right_key}``) is still accepted and is normalized by
+the worker into a leading ``hash_join`` op.
+
+Other ops: {"op": "filter", "expr": [...]} | {"op": "project", "columns":
+[name | [name, value-expr], ...]} | {"op": "hash_agg", "keys": [...],
+"aggs": [[out, fn, col], ...]} | {"op": "udf", "name": ..., "kwargs": ...,
+"broadcast": {...}} (see ``operators.py`` for expression grammar).
 """
 from __future__ import annotations
 
@@ -45,7 +66,8 @@ class Pipeline:
     ops: list[dict]
     output: object                      # ShuffleOutput | CollectOutput
     input2: Optional[ShuffleInput] = None
-    join: Optional[dict] = None         # {left_key, right_key}
+    # legacy {left_key, right_key}; prefer a hash_join op in ``ops``
+    join: Optional[dict] = None
     fragments: Optional[int] = None     # fixed parallelism (else coordinator)
 
     def deps(self) -> list[str]:

@@ -166,8 +166,9 @@ def q12_plan(shuffle_partitions: int = 8,
         name="join_agg",
         input=ShuffleInput("scan_lineitem"),
         input2=ShuffleInput("scan_orders"),
-        join={"left_key": "l_orderkey", "right_key": "o_orderkey"},
-        ops=[{"op": "project", "columns": [
+        ops=[{"op": "hash_join", "left_key": "l_orderkey",
+              "right_key": "o_orderkey"},
+             {"op": "project", "columns": [
                  "l_shipmode",
                  ["high_line", ["case_in", "o_orderpriority",
                                 [URGENT, HIGH]]],

@@ -7,23 +7,37 @@ operator chain (numpy-interpreted or jit-compiled, per the fragment's
 Workers never talk to each other — all communication is through the object
 store, as serverless functions require.
 
-Shuffle output uses a single-pass radix partitioner: one stable argsort of
-``key % r`` orders every row by destination, a bincount gives partition
-boundaries, and each partition is a contiguous slice of the reordered
-columns — O(rows log rows) total instead of the per-partition rescan's
-O(rows x partitions). Partitions serialize as zero-copy columnar frames
-(``columnar.serialize_frame``), and empty partitions are skipped entirely:
-readers treat a missing shuffle object as zero rows (``missing_ok``).
+The equi-join is a pipeline op (``{"op": "hash_join", ...}``): the worker
+resolves the build-side read into the op spec and hands the whole chain to
+``engine_compile`` — on the jit backend the join probe, the downstream
+operators, and the shuffle's radix partition assignment trace as one
+compiled call (``run_pipeline_partition``); the numpy backend keeps the
+interpreted reference semantics. Legacy ``FragmentSpec.join`` specs are
+normalized into a leading ``hash_join`` op.
+
+Shuffle hardening: each writer reports the bitmap of partitions it
+actually wrote (``FragmentMetrics.partitions_written``) and records it in
+the query's ``ShuffleRegistry``. ``missing_ok`` readers consult the
+registry for every absent shuffle object: a clear bit is a skipped-empty
+partition (fine, zero rows); a set bit means the object was written and
+lost (or mis-keyed) and the read fails loudly instead of silently
+dropping rows. Absences with no recorded bitmap keep the legacy tolerant
+behaviour (standalone fragments executed without a registry).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
 from repro.core.storage_service import ObjectStore
 from repro.engine import columnar, compile as engine_compile, operators
 from repro.engine.columnar import ColumnBatch
+
+# Re-exported: the single-pass radix partitioner lives in ``operators`` so
+# both execution backends share it without circular imports.
+radix_partition = operators.radix_partition
 
 
 @dataclasses.dataclass
@@ -35,8 +49,8 @@ class FragmentSpec:
     read_keys2: list[str]               # build-side objects (joins)
     columns: list[str] | None           # projection pushdown for table scans
     ops: list[dict]
-    join: dict | None
-    output: dict                        # {"type": "shuffle"|"collect", ...}
+    join: dict | None = None            # legacy: prepended as a hash_join op
+    output: dict = dataclasses.field(default_factory=dict)
     backend: str = "numpy"              # "numpy" | "jit"
     missing_ok: bool = False            # inputs may be skipped-empty objects
 
@@ -49,6 +63,38 @@ class FragmentMetrics:
     write_bytes: int = 0
     rows_in: int = 0
     rows_out: int = 0
+    partitions_written: int = 0         # bitmap over shuffle partition ids
+
+
+class ShuffleRegistry:
+    """Per-query record of which shuffle partitions each writer fragment
+    produced. Writers record their bitmap after the shuffle write; readers
+    use it to tell a skipped-empty partition apart from a lost write."""
+
+    def __init__(self):
+        self._bitmaps: dict[tuple[str, str, int], int] = {}
+
+    def record(self, query_id: str, pipeline: str, writer: int,
+               bitmap: int) -> None:
+        self._bitmaps[(query_id, pipeline, writer)] = bitmap
+
+    def bitmap(self, query_id: str, pipeline: str, writer: int
+               ) -> Optional[int]:
+        return self._bitmaps.get((query_id, pipeline, writer))
+
+    def validate_missing(self, key: str) -> None:
+        """Raise if ``key`` names a shuffle object its writer reported
+        written; silently accept unknown keys / unrecorded writers."""
+        parsed = parse_shuffle_key(key)
+        if parsed is None:
+            return
+        query_id, pipeline, writer, part = parsed
+        bm = self.bitmap(query_id, pipeline, writer)
+        if bm is not None and (bm >> part) & 1:
+            raise RuntimeError(
+                f"shuffle object {key!r} was reported written by fragment "
+                f"{writer} of pipeline {pipeline!r} but is missing from "
+                "storage: lost or mis-keyed write")
 
 
 def _resolve_broadcasts(store: ObjectStore, ops: list[dict],
@@ -72,14 +118,16 @@ def _resolve_broadcasts(store: ObjectStore, ops: list[dict],
 
 
 def _read_side(store: ObjectStore, keys: list[str], columns,
-               metrics: FragmentMetrics, missing_ok: bool = False
-               ) -> ColumnBatch:
+               metrics: FragmentMetrics, missing_ok: bool = False,
+               registry: Optional[ShuffleRegistry] = None) -> ColumnBatch:
     batches = []
     for key in keys:
         try:
             data = store.retrying_get(key)
         except KeyError:
             if missing_ok:   # empty shuffle partition: writer skipped it
+                if registry is not None:
+                    registry.validate_missing(key)
                 metrics.read_requests += 1   # the 404 probe is a request
                 continue
             raise
@@ -91,52 +139,61 @@ def _read_side(store: ObjectStore, keys: list[str], columns,
     return batch
 
 
-def radix_partition(batch: ColumnBatch, key_col: str, partitions: int
-                    ) -> list[ColumnBatch]:
-    """Single-pass shuffle partitioner. Returns ``partitions`` batches,
-    the i-th holding the rows with ``key % partitions == i`` (empty batches
-    share the reordered arrays via zero-length views)."""
-    if batch.num_rows == 0:
-        return [batch] * partitions
-    assign = np.asarray(batch[key_col]).astype(np.int64) % partitions
-    order = np.argsort(assign, kind="stable")
-    counts = np.bincount(assign, minlength=partitions)
-    bounds = np.concatenate(([0], np.cumsum(counts)))
-    reordered = {k: np.asarray(v)[order] for k, v in batch.items()}
-    out = []
-    for p in range(partitions):
-        lo, hi = int(bounds[p]), int(bounds[p + 1])
-        out.append(ColumnBatch({k: v[lo:hi] for k, v in reordered.items()}))
-    return out
+def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
+                   metrics: FragmentMetrics,
+                   registry: Optional[ShuffleRegistry]) -> list[dict]:
+    """Resolve the op chain to executable form: legacy ``spec.join``
+    becomes a leading ``hash_join`` op, build-side reads resolve into the
+    join op specs, broadcast side-inputs load into UDF kwargs."""
+    ops = list(spec.ops)
+    if spec.join is not None:
+        ops.insert(0, {"op": "hash_join", **spec.join})
+    join_ops = [op for op in ops if op.get("op") == "hash_join"]
+    if join_ops:
+        # Build side is always shuffle output, so always missing-tolerant.
+        build = _read_side(store, spec.read_keys2, None, metrics,
+                           missing_ok=True, registry=registry)
+        resolved = []
+        for op in ops:
+            if op.get("op") == "hash_join" and "build" not in op:
+                op = {**op, "build": build}
+            resolved.append(op)
+        ops = resolved
+    return _resolve_broadcasts(store, ops, metrics)
 
 
-def execute_fragment(store: ObjectStore, spec: FragmentSpec
+def execute_fragment(store: ObjectStore, spec: FragmentSpec,
+                     registry: Optional[ShuffleRegistry] = None
                      ) -> FragmentMetrics:
     metrics = FragmentMetrics()
     batch = _read_side(store, spec.read_keys, spec.columns, metrics,
-                       missing_ok=spec.missing_ok)
-    if spec.join is not None:
-        # Build side is always shuffle output, so always missing-tolerant.
-        build = _read_side(store, spec.read_keys2, None, metrics,
-                           missing_ok=True)
-        batch = operators.op_hash_join(batch, build, spec.join["left_key"],
-                                       spec.join["right_key"])
-    ops = _resolve_broadcasts(store, spec.ops, metrics)
-    batch = engine_compile.run_pipeline(batch, ops, backend=spec.backend)
-    metrics.rows_out = batch.num_rows
+                       missing_ok=spec.missing_ok, registry=registry)
+    ops = _normalize_ops(store, spec, metrics, registry)
 
     out = spec.output
     if out["type"] == "shuffle":
-        parts = radix_partition(batch, out["partition_by"], out["partitions"])
+        parts = engine_compile.run_pipeline_partition(
+            batch, ops, out["partition_by"], out["partitions"],
+            backend=spec.backend)
+        bitmap = 0
         for part, sel in enumerate(parts):
+            metrics.rows_out += sel.num_rows
             if sel.num_rows == 0:
                 continue   # readers tolerate the missing object
+            bitmap |= 1 << part
             data = columnar.serialize_frame(sel)
             store.put(shuffle_key(spec.query_id, spec.pipeline,
                                   spec.fragment, part), data)
             metrics.write_requests += 1
             metrics.write_bytes += len(data)
+        metrics.partitions_written = bitmap
+        if registry is not None:
+            registry.record(spec.query_id, spec.pipeline, spec.fragment,
+                            bitmap)
     else:
+        batch = engine_compile.run_pipeline(batch, ops,
+                                            backend=spec.backend)
+        metrics.rows_out = batch.num_rows
         data = columnar.serialize_frame(batch)
         store.put(result_key(spec.query_id, spec.pipeline, spec.fragment),
                   data)
@@ -147,6 +204,20 @@ def execute_fragment(store: ObjectStore, spec: FragmentSpec
 
 def shuffle_key(query_id: str, pipeline: str, writer: int, part: int) -> str:
     return f"shuffle/{query_id}/{pipeline}/w{writer:04d}/r{part:04d}"
+
+
+def parse_shuffle_key(key: str) -> Optional[tuple[str, str, int, int]]:
+    """Inverse of ``shuffle_key``; None for keys in other namespaces."""
+    parts = key.split("/")
+    if len(parts) != 5 or parts[0] != "shuffle":
+        return None
+    writer, part = parts[3], parts[4]
+    if not (writer.startswith("w") and part.startswith("r")):
+        return None
+    try:
+        return parts[1], parts[2], int(writer[1:]), int(part[1:])
+    except ValueError:
+        return None
 
 
 def result_key(query_id: str, pipeline: str, fragment: int) -> str:

@@ -1,6 +1,8 @@
 """Compiled (jit) engine backend: parity with the interpreted numpy
-backend on the full query suite, the zero-copy shuffle frame format,
-the single-pass radix partitioner, and the Pallas segmented reduction."""
+backend on the full query suite (including the fused hash_join -> ops ->
+partition tail), the zero-copy shuffle frame format, the single-pass
+radix partitioner, shuffle-skip bitmap hardening, and the Pallas
+segmented reduction."""
 import numpy as np
 import pytest
 
@@ -9,7 +11,8 @@ from repro.engine import (columnar, compile as engine_compile, datagen,
                           operators, queries)
 from repro.engine.columnar import ColumnBatch
 from repro.engine.coordinator import Coordinator
-from repro.engine.worker import (FragmentSpec, execute_fragment,
+from repro.engine.worker import (FragmentSpec, ShuffleRegistry,
+                                 execute_fragment, parse_shuffle_key,
                                  radix_partition, result_key, shuffle_key)
 from repro.kernels.segment_reduce import segment_reduce, segment_reduce_np
 
@@ -263,6 +266,292 @@ def test_project_empty_batch_keeps_dtypes():
         empty, ["k", "v", ["d", ["mul", "v", "v"]], ["z", ["const", 0]]])
     assert out.num_rows == 0 and list(out) == ["k", "v", "d", "z"]
     assert out["k"].dtype == np.int8 and out["v"].dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# hash_join: numpy-vs-jit parity (the fused join -> ops -> partition tail)
+# ---------------------------------------------------------------------------
+
+def _join_batches(n=20_000, s=5_000, match_frac=1.3, seed=5):
+    rng = np.random.default_rng(seed)
+    left = ColumnBatch({
+        "l_orderkey": rng.integers(1, max(2, int(s * match_frac)), n
+                                   ).astype(np.int64),
+        "l_shipmode": rng.integers(0, 7, n, dtype=np.int8),
+        "l_price": np.round(rng.uniform(1.0, 100.0, n), 2),
+    })
+    build = ColumnBatch({
+        "o_orderkey": rng.permutation(np.arange(1, s + 1)).astype(np.int64),
+        "o_orderpriority": rng.integers(0, 5, s, dtype=np.int8),
+    })
+    return left, build
+
+
+def _join_op(build):
+    return {"op": "hash_join", "left_key": "l_orderkey",
+            "right_key": "o_orderkey", "build": build}
+
+
+def _assert_batch_close(a, b, rtol=1e-4):
+    assert list(a) == list(b)
+    assert a.num_rows == b.num_rows
+    for c in a:
+        np.testing.assert_allclose(np.asarray(a[c], np.float64),
+                                   np.asarray(b[c], np.float64), rtol=rtol)
+
+
+def test_join_parity_plain():
+    left, build = _join_batches()
+    ops = [_join_op(build)]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    _assert_batch_close(a, b)
+    assert a.num_rows > 0
+    # Pass-through columns keep their dtypes on the compiled path.
+    assert b["l_orderkey"].dtype == np.int64
+    assert b["l_price"].dtype == np.float64
+    assert b["o_orderpriority"].dtype == np.int8
+
+
+def test_join_parity_with_fused_filter_and_projection():
+    left, build = _join_batches()
+    ops = [_join_op(build),
+           {"op": "filter", "expr": ["in", "l_shipmode",
+                                     [queries.MAIL, queries.SHIP]]},
+           {"op": "project", "columns": [
+               "l_orderkey", "l_shipmode",
+               ["high_line", ["case_in", "o_orderpriority",
+                              [queries.URGENT, queries.HIGH]]],
+               ["low_line", ["sub1", ["case_in", "o_orderpriority",
+                                      [queries.URGENT, queries.HIGH]]]]]}]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    _assert_batch_close(a, b)
+    assert 0 < a.num_rows < left.num_rows
+
+
+def test_join_parity_followed_by_agg():
+    left, build = _join_batches()
+    ops = [_join_op(build),
+           {"op": "project", "columns": [
+               "l_shipmode",
+               ["high_line", ["case_in", "o_orderpriority",
+                              [queries.URGENT, queries.HIGH]]]]},
+           {"op": "hash_agg", "keys": ["l_shipmode"],
+            "aggs": [["high", "sum", "high_line"],
+                     ["cnt", "count", "high_line"]]}]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    _assert_batch_close(a, b)
+
+
+def test_join_partition_parity():
+    """The tentpole path: join -> ops -> radix partition fused into one
+    compiled call must slice identically to the interpreted reference."""
+    left, build = _join_batches()
+    ops = [_join_op(build),
+           {"op": "filter", "expr": ["in", "l_shipmode", [2, 5]]},
+           {"op": "project", "columns": [
+               "l_orderkey", "l_shipmode",
+               ["high_line", ["case_in", "o_orderpriority", [0, 1]]]]}]
+    r = 8
+    pa = engine_compile.run_pipeline_partition(left, ops, "l_orderkey", r,
+                                               backend="numpy")
+    pb = engine_compile.run_pipeline_partition(left, ops, "l_orderkey", r,
+                                               backend="jit")
+    assert len(pa) == len(pb) == r
+    for p in range(r):
+        _assert_batch_close(pa[p], pb[p])
+        # Row order within a partition matches the stable reference.
+        np.testing.assert_array_equal(np.asarray(pa[p]["l_orderkey"]),
+                                      np.asarray(pb[p]["l_orderkey"]))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jit"])
+def test_join_empty_sides(backend):
+    left, build = _join_batches(n=100, s=50)
+    empty_left = ColumnBatch({k: np.asarray([], dtype=v.dtype)
+                              for k, v in left.items()})
+    out = engine_compile.run_pipeline(empty_left, [_join_op(build)],
+                                      backend=backend)
+    assert out.num_rows == 0
+    assert set(out) == set(left) | {"o_orderpriority"}
+    out2 = engine_compile.run_pipeline(
+        left, [_join_op(ColumnBatch({}))], backend=backend)
+    assert out2.num_rows == 0
+
+
+def test_join_duplicate_build_keys_expand():
+    """Satellite bugfix: duplicate build keys must expand (SQL inner-join
+    multiplicity), not silently drop matches — on both backends."""
+    left = ColumnBatch({"k": np.asarray([1, 2, 3, 1], np.int64),
+                        "lv": np.asarray([10.0, 20.0, 30.0, 40.0])})
+    build = ColumnBatch({"bk": np.asarray([1, 1, 2, 5], np.int64),
+                         "bv": np.asarray([0.5, 0.25, 0.125, 9.0])})
+    ref = operators.op_hash_join(left, build, "k", "bk")
+    # Probe row 0 and 3 each match both build rows with key 1.
+    assert ref["k"].tolist() == [1, 1, 2, 1, 1]
+    assert ref["lv"].tolist() == [10.0, 10.0, 20.0, 40.0, 40.0]
+    assert ref["bv"].tolist() == [0.5, 0.25, 0.125, 0.5, 0.25]
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build}]
+    jit_out = engine_compile.run_pipeline(left, ops, backend="jit")
+    _assert_batch_close(ref, jit_out)
+
+
+def test_join_full_int32_span_build_keys():
+    """Build keys spanning more than int31 (large negative AND large
+    positive) must still probe correctly: the kernel's bucket offset is
+    computed in uint32 so the wrapped int32 difference cannot misroute
+    keys (regression test for a silent row-drop)."""
+    left = ColumnBatch({"k": np.asarray([2**31 - 1, 7, -5, -2**31],
+                                        np.int64)})
+    build = ColumnBatch({"bk": np.asarray([-2**31, -5, 0, 7, 2**31 - 1],
+                                          np.int64),
+                         "bv": np.asarray([1.0, 2.0, 3.0, 4.0, 5.0])})
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build}]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    assert a["k"].tolist() == b["k"].tolist() \
+        == [2**31 - 1, 7, -5, -2**31]
+    assert a["bv"].tolist() == b["bv"].tolist() == [5.0, 4.0, 2.0, 1.0]
+
+
+def test_join_int32_overflow_falls_back():
+    """Keys beyond int32 range must not be truncated at the jit boundary:
+    the compiled tail routes the whole segment to the numpy reference."""
+    left = ColumnBatch({"k": np.asarray([2**40, 7, 2**31 + 1], np.int64)})
+    build = ColumnBatch({"bk": np.asarray([2**40, 2**31 + 1, 8], np.int64),
+                         "bv": np.asarray([1.0, 2.0, 3.0])})
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build}]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    assert a["k"].tolist() == b["k"].tolist() == [2**40, 2**31 + 1]
+    assert a["bv"].tolist() == b["bv"].tolist() == [1.0, 2.0]
+
+
+def test_q12_join_as_op_plan_shape():
+    """Q12's plan carries the join as a pipeline op, not a side-channel."""
+    plan = queries.q12_plan()
+    join_pipe = next(p for p in plan.pipelines if p.name == "join_agg")
+    assert join_pipe.join is None
+    assert join_pipe.ops[0]["op"] == "hash_join"
+    assert join_pipe.ops[0]["left_key"] == "l_orderkey"
+
+
+def test_q12_end_to_end_parity(loaded_store):
+    """Q12 returns identical results across backends (rtol 1e-4) with the
+    join running as a fused pipeline op."""
+    store, keys = loaded_store
+    res = {b: _run(store, keys, b, queries.q12_plan, "q12-e2e")
+           for b in ("numpy", "jit")}
+    a, b = res["numpy"].result, res["jit"].result
+    assert a.num_rows == b.num_rows > 0
+    ra, rb = _sorted_rows(a, ["l_shipmode"]), _sorted_rows(b, ["l_shipmode"])
+    for col in ra:
+        np.testing.assert_allclose(np.asarray(ra[col], np.float64),
+                                   np.asarray(rb[col], np.float64),
+                                   rtol=1e-4)
+
+
+def test_legacy_fragmentspec_join_still_supported():
+    """Pre-PR2 FragmentSpec.join specs normalize to a hash_join op."""
+    store = ObjectStore()
+    left = ColumnBatch({"k": np.asarray([1, 2, 3], np.int64),
+                        "v": np.asarray([1.0, 2.0, 3.0])})
+    build = ColumnBatch({"bk": np.asarray([2, 3], np.int64),
+                         "bv": np.asarray([20.0, 30.0])})
+    store.put("t/left", columnar.serialize(left))
+    store.put("t/build", columnar.serialize(build))
+    spec = FragmentSpec(
+        query_id="q", pipeline="p", fragment=0, read_keys=["t/left"],
+        read_keys2=["t/build"], columns=None, ops=[],
+        join={"left_key": "k", "right_key": "bk"},
+        output={"type": "collect"})
+    execute_fragment(store, spec)
+    out = columnar.deserialize(store.get(result_key("q", "p", 0)))
+    assert out["k"].tolist() == [2, 3]
+    assert out["bv"].tolist() == [20.0, 30.0]
+
+
+# ---------------------------------------------------------------------------
+# Shuffle-skip hardening: partition bitmaps distinguish skipped-empty
+# partitions from lost writes
+# ---------------------------------------------------------------------------
+
+def test_parse_shuffle_key_roundtrip():
+    key = shuffle_key("q12", "scan_lineitem", 3, 17)
+    assert parse_shuffle_key(key) == ("q12", "scan_lineitem", 3, 17)
+    assert parse_shuffle_key("result/q/p/frag-0000") is None
+    assert parse_shuffle_key("shuffle/q/p/bogus") is None
+
+
+def _shuffle_producer_consumer(store, registry):
+    batch = ColumnBatch({"key": np.arange(0, 80, 8, dtype=np.int64),
+                         "val": np.arange(10, dtype=np.float64)})
+    store.put("table/t0", columnar.serialize(batch))
+    producer = FragmentSpec(
+        query_id="q", pipeline="p", fragment=0, read_keys=["table/t0"],
+        read_keys2=[], columns=None, ops=[], join=None,
+        output={"type": "shuffle", "partition_by": "key", "partitions": 8})
+    pm = execute_fragment(store, producer, registry=registry)
+    consumer = FragmentSpec(
+        query_id="q", pipeline="c", fragment=0,
+        read_keys=[shuffle_key("q", "p", 0, part) for part in range(8)],
+        read_keys2=[], columns=None, ops=[], join=None,
+        output={"type": "collect"}, missing_ok=True)
+    return pm, consumer, batch
+
+
+def test_partition_bitmap_reported_and_skips_validated():
+    store = ObjectStore()
+    registry = ShuffleRegistry()
+    pm, consumer, batch = _shuffle_producer_consumer(store, registry)
+    # Every key is 0 mod 8: only partition 0 written.
+    assert pm.partitions_written == 1
+    assert registry.bitmap("q", "p", 0) == 1
+    # The seven skipped-empty partitions read clean through the registry.
+    cm = execute_fragment(store, consumer, registry=registry)
+    assert cm.rows_in == batch.num_rows
+
+
+def test_lost_shuffle_write_fails_loudly():
+    store = ObjectStore()
+    registry = ShuffleRegistry()
+    _, consumer, _ = _shuffle_producer_consumer(store, registry)
+    store.delete(shuffle_key("q", "p", 0, 0))   # simulate a lost object
+    with pytest.raises(RuntimeError, match="lost or mis-keyed"):
+        execute_fragment(store, consumer, registry=registry)
+    # Without a registry the legacy tolerant behaviour is preserved.
+    cm = execute_fragment(store, consumer)
+    assert cm.rows_in == 0
+
+
+def test_coordinator_query_detects_lost_shuffle_write(loaded_store):
+    """End to end: a shuffle object that vanishes right after its write
+    makes the consumer stage fail instead of silently dropping rows."""
+    store, keys = loaded_store
+    c = Coordinator(store, mode="elastic", backend="numpy")
+    for t in ("lineitem", "orders"):
+        c.register_table(t, keys[t])
+    qid = "q12-lost-write"
+    dropped = []
+    orig_put = store.put
+
+    def vanishing_put(key, data):
+        orig_put(key, data)
+        if not dropped and key.startswith(f"shuffle/{qid}/scan_lineitem/"):
+            store.delete(key)       # the write "succeeds" but the object
+            dropped.append(key)     # is gone when the consumer reads it
+    store.put = vanishing_put
+    try:
+        with pytest.raises(RuntimeError, match="lost or mis-keyed"):
+            c.execute(queries.q12_plan(), query_id=qid)
+    finally:
+        store.put = orig_put
+    assert dropped
 
 
 # ---------------------------------------------------------------------------

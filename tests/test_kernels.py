@@ -213,3 +213,55 @@ def test_blocked_sdpa_matches_reference(rng, causal, window):
     b = _blocked_sdpa(q, k, v, causal=causal, window=window, block_k=32)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=2e-5, atol=2e-5)
+
+
+# -- sorted-probe (hash join) -------------------------------------------------
+
+from repro.kernels.hash_join import (prepare_buckets, sorted_probe,
+                                     sorted_probe_np)
+
+
+@pytest.mark.parametrize("n,s,lo,hi", [
+    (1000, 400, 0, 600),          # partial match, dense keys
+    (5000, 1, 0, 4),              # single-row build
+    (257, 4096, -500, 9000),      # negative keys, probe wider than build
+    (64, 1000, 10**6, 10**9),     # sparse keys, wide span
+])
+def test_sorted_probe_matches_oracle(rng, n, s, lo, hi):
+    build = np.sort(rng.choice(np.arange(lo, hi), size=s, replace=False)
+                    ).astype(np.int32)
+    keys = rng.integers(lo - 10, hi + 10, n).astype(np.int32)
+    pos, match = sorted_probe(build, keys, interpret=True)
+    ref_pos, ref_match = sorted_probe_np(build, keys)
+    np.testing.assert_array_equal(np.asarray(match), ref_match)
+    np.testing.assert_array_equal(np.asarray(pos)[ref_match],
+                                  ref_pos[ref_match])
+
+
+def test_sorted_probe_duplicate_build_keys_lower_bound(rng):
+    """With duplicate build keys the probe returns the FIRST occurrence
+    (lower bound), which the engine relies on to detect duplicates."""
+    build = np.sort(rng.integers(0, 50, 300)).astype(np.int32)
+    keys = np.arange(-5, 60, dtype=np.int32)
+    pos, match = sorted_probe(build, keys, interpret=True)
+    ref_pos, ref_match = sorted_probe_np(build, keys)
+    np.testing.assert_array_equal(np.asarray(match), ref_match)
+    np.testing.assert_array_equal(np.asarray(pos)[ref_match],
+                                  ref_pos[ref_match])
+
+
+def test_prepare_buckets_depth_covers_skew(rng):
+    """The static search depth must cover the most populated bucket even
+    under heavy key skew."""
+    build = np.sort(np.concatenate([
+        np.zeros(5000, np.int32),                       # one huge bucket
+        rng.integers(1, 2**30, 100).astype(np.int32)])).astype(np.int32)
+    scal, starts, iters = prepare_buckets(build)
+    keys = np.concatenate([np.zeros(10, np.int32),
+                           rng.integers(0, 2**30, 100).astype(np.int32)])
+    pos, match = sorted_probe(build, keys, scalars=scal, starts=starts,
+                              iters=iters, interpret=True)
+    ref_pos, ref_match = sorted_probe_np(build, keys)
+    np.testing.assert_array_equal(np.asarray(match), ref_match)
+    np.testing.assert_array_equal(np.asarray(pos)[ref_match],
+                                  ref_pos[ref_match])
