@@ -10,7 +10,11 @@
   also stay within ``--tolerance`` (default 0.5, i.e. at least half) of
   the baseline's recorded value — catching slow decay that stays above
   1.0. Microbenchmark noise across machines is real, hence the loose
-  default.
+  default;
+* the ``planning`` section's ``overhead_frac`` (logical->physical
+  lowering cost over an end-to-end Q12 run) must stay under
+  ``PLANNING_OVERHEAD_MAX`` — the optimizer is supposed to be free
+  relative to the queries it plans.
 
 Exit code 0 when clean, 1 with a per-metric report otherwise. Use
 ``--current FILE`` to gate freshly produced results instead of the
@@ -26,6 +30,7 @@ import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_BENCH = REPO_ROOT / "BENCH_engine.json"
+PLANNING_OVERHEAD_MAX = 0.01        # lowering < 1% of Q12 runtime
 
 
 def collect_speedups(obj, prefix="") -> dict[str, float]:
@@ -69,6 +74,14 @@ def check(current: dict, baseline: dict | None,
             failures.append(
                 f"{name}: {value:.3f}x dropped below {tolerance:.0%} of "
                 f"the committed baseline ({base:.3f}x)")
+    planning = current.get("planning", {})
+    frac = planning.get("overhead_frac")
+    # Exclusive bound, matching engine_bench.EXPECT's inclusive ceiling.
+    if frac is not None and frac > PLANNING_OVERHEAD_MAX:
+        failures.append(
+            f"planning.overhead_frac: {frac:.4f} > "
+            f"{PLANNING_OVERHEAD_MAX} — logical->physical lowering costs "
+            "more than 1% of a Q12 run")
     return failures
 
 
@@ -100,6 +113,10 @@ def main(argv=None) -> int:
     speedups = collect_speedups(current)
     for name, value in sorted(speedups.items()):
         print(f"  {name}: {value:.3f}x")
+    frac = current.get("planning", {}).get("overhead_frac")
+    if frac is not None:
+        print(f"  planning.overhead_frac: {frac:.5f} "
+              f"(max {PLANNING_OVERHEAD_MAX})")
     if failures:
         print("\nREGRESSIONS:")
         for f in failures:

@@ -16,6 +16,11 @@ is scan/decode + shuffle materialization). Four comparisons:
                   radix_partition vs the compiled backend's fused
                   join->ops->partition tail (one traced call backed by the
                   Pallas sorted-probe kernel).
+* planning      — logical->physical lowering cost of the optimizer
+                  (``engine.optimizer``) for every paper query, and that
+                  cost as a fraction of an end-to-end Q12 run: planning
+                  must stay under 1% of query runtime
+                  (``check_regression`` gates it).
 
 ``python -m benchmarks.engine_bench`` writes ``BENCH_engine.json`` at the
 repo root so the perf trajectory is tracked across PRs; ``ALL``/``EXPECT``
@@ -31,6 +36,7 @@ import time
 import numpy as np
 
 from repro.engine import columnar, compile as engine_compile, operators
+from repro.engine import optimizer, queries
 from repro.engine.columnar import ColumnBatch
 from repro.engine.worker import radix_partition
 
@@ -254,6 +260,52 @@ def bench_join_pipeline() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 5) planning: logical -> physical lowering overhead per paper query
+# ---------------------------------------------------------------------------
+
+PLANNING_Q12_ROWS = 60_000
+PLANNING_Q12_PARTS = 12
+
+
+def _q12_runtime_s() -> float:
+    """Best-of-3 warmed wall time of an end-to-end Q12 run on a small
+    in-memory store — the denominator of the planning-overhead fraction.
+    Warmed + min-of-N so the gated ratio is stable run to run (and uses
+    the FASTEST runtime, the conservative denominator for the < 1%
+    check)."""
+    from repro.core.storage_service import ObjectStore
+    from repro.engine import datagen
+    from repro.engine.coordinator import Coordinator
+
+    store = ObjectStore()
+    coord = Coordinator(store, mode="elastic")
+    coord.register_table("lineitem", datagen.load_table(
+        store, "lineitem", PLANNING_Q12_ROWS, PLANNING_Q12_PARTS))
+    coord.register_table("orders", datagen.load_table(
+        store, "orders", PLANNING_Q12_ROWS // 4, PLANNING_Q12_PARTS // 2))
+    plan = queries.q12_plan()   # lowering happens OUTSIDE the timed region
+    coord.execute(plan, query_id="bench-planning-q12-warm")
+    return _best(lambda: coord.execute(plan, query_id="bench-planning-q12"),
+                 repeats=3)
+
+
+def bench_planning() -> dict:
+    builders = {
+        "q1": queries.q1_logical,
+        "q6": queries.q6_logical,
+        "q12": queries.q12_logical,
+        "bb_q3": lambda: queries.bb_q3_logical("tables/item/part-00000"),
+    }
+    out: dict = {}
+    for name, build in builders.items():
+        out[f"{name}_lower_s"] = _best(lambda b=build: optimizer.plan(b()))
+    q12_runtime = _q12_runtime_s()
+    out["q12_runtime_s"] = q12_runtime
+    out["overhead_frac"] = out["q12_lower_s"] / q12_runtime
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
@@ -265,6 +317,7 @@ def run_all() -> dict:
             "join_pipeline": bench_join_pipeline(),
             "serde": bench_serde(),
             "shuffle": bench_shuffle(),
+            "planning": bench_planning(),
             "config": {"serde_rows": SERDE_ROWS,
                        "shuffle_rows": SHUFFLE_ROWS,
                        "shuffle_partitions": SHUFFLE_PARTITIONS,
@@ -279,7 +332,7 @@ def engine_data_plane():
     """benchmarks.run hook: (name, us_per_call, derived) rows."""
     results = run_all()
     sh, pp, sd = results["shuffle"], results["pipeline"], results["serde"]
-    jp = results["join_pipeline"]
+    jp, pl = results["join_pipeline"], results["planning"]
     return [
         ("engine/frame_deser_speedup", 0.0, sd["deser_speedup"]),
         ("engine/shuffle_seed_mib_s", sh["seed_s"] * 1e6, sh["seed_mib_s"]),
@@ -295,6 +348,10 @@ def engine_data_plane():
          jp["numpy_mrows_s"]),
         ("engine/join_jit_mrows_s", jp["jit_s"] * 1e6, jp["jit_mrows_s"]),
         ("engine/fused_join_pipeline_speedup", 0.0, jp["speedup"]),
+        ("engine/planning_q12_lower_us", pl["q12_lower_s"] * 1e6,
+         pl["q12_lower_s"] * 1e6),
+        ("engine/planning_overhead_frac", pl["q12_lower_s"] * 1e6,
+         pl["overhead_frac"]),
     ]
 
 
@@ -303,6 +360,8 @@ EXPECT = {
     "engine/shuffle_speedup": (3.0, 1000.0),
     "engine/fused_pipeline_speedup": (1.5, 1000.0),
     "engine/fused_join_pipeline_speedup": (1.5, 1000.0),
+    # Logical->physical lowering must cost < 1% of a Q12 run.
+    "engine/planning_overhead_frac": (0.0, 0.01),
 }
 
 ALL = [engine_data_plane]

@@ -1,6 +1,39 @@
 """Skyrise serverless query engine (paper §3.2): a shared-storage engine
 whose coordinator and workers are stateless tasks communicating only
 through the object store, runnable in 'elastic' (FaaS) or 'provisioned'
-(IaaS) mode with identical physical plans."""
+(IaaS) mode with identical physical plans.
+
+Public API: author queries with the logical builder (``scan``/``col``/
+``lit`` plus the aggregate helpers), hand the resulting ``LogicalQuery``
+to ``Coordinator.run`` (which optimizes and lowers it), or lower it
+yourself via ``engine.optimizer``. ``QueryPlan`` remains the physical
+interchange format. ``python -m repro.engine.explain <query>`` shows a
+query's logical plan, the applied optimizer rules, and the physical
+pipelines.
+"""
 from repro.engine import (columnar, compile, coordinator,  # noqa: F401
-                          datagen, operators, plans, queries, worker)
+                          datagen, logical, operators, optimizer,
+                          plans, queries, worker)
+from repro.engine.coordinator import Coordinator
+from repro.engine.logical import (col, count_, lit, max_, min_, scan,
+                                  sum_)
+from repro.engine.plans import QueryPlan
+
+
+def __getattr__(name):
+    # ``explain`` loads lazily so ``python -m repro.engine.explain``
+    # doesn't trip runpy's already-imported warning.
+    if name == "explain":
+        import importlib
+        return importlib.import_module("repro.engine.explain")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    # primary entry points
+    "Coordinator", "QueryPlan",
+    # logical builder
+    "scan", "col", "lit", "sum_", "count_", "min_", "max_",
+    # modules
+    "columnar", "compile", "coordinator", "datagen", "explain", "logical",
+    "operators", "optimizer", "plans", "queries", "worker",
+]

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine import logical as engine_logical
 from repro.engine import operators
 from repro.engine.columnar import ColumnBatch
 from repro.kernels import hash_join as hj_kernel
@@ -77,37 +78,12 @@ def _interpret() -> bool:
 
 # ---------------------------------------------------------------------------
 # Expression analysis (evaluation itself is shared: operators.eval_expr /
-# eval_value traced with xp=jnp)
+# eval_value traced with xp=jnp; the referenced-column walkers are shared
+# with the logical planner so the two layers cannot drift on the grammar)
 # ---------------------------------------------------------------------------
 
-def _expr_refs(expr, out: set):
-    """Columns referenced by a predicate expression."""
-    op = expr[0]
-    if op in ("and", "or"):
-        for sub in expr[1:]:
-            _expr_refs(sub, out)
-    elif op == "ltcol":
-        out.update((expr[1], expr[2]))
-    else:   # lt | le | ge | eq | between | in — column name at [1]
-        out.add(expr[1])
-    return out
-
-
-def _value_refs(expr, out: set):
-    """Columns referenced by a value expression."""
-    if isinstance(expr, str):
-        out.add(expr)
-        return out
-    op = expr[0]
-    if op in ("mul", "add"):
-        _value_refs(expr[1], out)
-        _value_refs(expr[2], out)
-    elif op in ("sub1", "add1"):
-        _value_refs(expr[1], out)
-    elif op == "case_in":
-        out.add(expr[1])
-    # "const": no refs
-    return out
+_expr_refs = engine_logical.pred_columns
+_value_refs = engine_logical.value_columns
 
 
 def _expr_consts(expr, out: list):
@@ -120,7 +96,7 @@ def _expr_consts(expr, out: list):
         out.extend(expr[2:4])
     elif op == "in":
         out.extend(expr[2])
-    elif op != "ltcol":   # lt | le | ge | eq
+    elif op != "ltcol":   # lt | le | ge | gt | eq | ne
         out.append(expr[2])
     return out
 
@@ -132,7 +108,7 @@ def _value_consts(expr, out: list):
     op = expr[0]
     if op == "const":
         out.append(expr[1])
-    elif op in ("mul", "add"):
+    elif op in ("mul", "add", "sub", "div"):
         _value_consts(expr[1], out)
         _value_consts(expr[2], out)
     elif op in ("sub1", "add1"):
@@ -220,9 +196,9 @@ def _int_valued(expr, env: dict) -> bool:
     if op == "const":
         return isinstance(expr[1], (int, np.integer)) \
             and not isinstance(expr[1], bool)
-    if op in ("mul", "add"):
+    if op in ("mul", "add", "sub"):
         return _int_valued(expr[1], env) and _int_valued(expr[2], env)
-    return False   # sub1 / add1 / case_in produce floats
+    return False   # div / sub1 / add1 / case_in produce floats
 
 
 class _ProjectStage:
@@ -349,7 +325,7 @@ def _int_valued_sim(expr, int_kinds: dict) -> bool:
     if op == "const":
         return isinstance(expr[1], (int, np.integer)) \
             and not isinstance(expr[1], bool)
-    if op in ("mul", "add"):
+    if op in ("mul", "add", "sub"):
         return _int_valued_sim(expr[1], int_kinds) \
             and _int_valued_sim(expr[2], int_kinds)
     return False

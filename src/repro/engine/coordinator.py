@@ -19,8 +19,9 @@ from repro.core import bench_profile, burst_planner, pricing, token_bucket
 from repro.core.elastic_pool import ColdStartModel, ElasticPool, ProvisionedPool
 from repro.core.scheduler import Fragment, Stage, StageScheduler, StragglerPolicy
 from repro.core.storage_service import ObjectStore, RequestStats
-from repro.engine import columnar, worker
+from repro.engine import columnar, optimizer, worker
 from repro.engine.columnar import ColumnBatch
+from repro.engine.logical import LogicalQuery
 from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
                                 ShuffleInput, ShuffleOutput, TableInput)
 
@@ -96,8 +97,21 @@ class Coordinator:
         self.table_keys[name] = keys
 
     # ------------------------------------------------------------------
+    def run(self, plan, query_id: Optional[str] = None) -> QueryResult:
+        """Execute a query given either a physical ``QueryPlan`` or a
+        logical ``logical.LogicalQuery``. Logical plans are optimized and
+        lowered here with statistics from the registered tables, so the
+        planner's fan-out and build-side choices see real object sizes
+        and this coordinator's backend throughput."""
+        if isinstance(plan, LogicalQuery):
+            stats = optimizer.Stats.from_store(self.store, self.table_keys)
+            plan, _report = optimizer.lower(plan, stats=stats,
+                                            backend=self.backend)
+        return self.execute(plan, query_id)
+
     def execute(self, plan: QueryPlan, query_id: Optional[str] = None
                 ) -> QueryResult:
+        plan.validate()   # fail fast, not as a KeyError mid-stage
         query_id = query_id or plan.name
         stats_before = dataclasses.replace(self.store.stats)
         # Per-query shuffle bitmap registry: writers record which

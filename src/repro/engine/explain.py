@@ -1,0 +1,118 @@
+"""Query explainer: logical plan -> applied rules -> physical pipelines.
+
+    PYTHONPATH=src python -m repro.engine.explain tpch_q12
+
+prints the declarative plan a query was authored as, every optimizer
+rule that fired while lowering it (predicate pushdown, projection
+pruning, aggregate splitting, build-side and shuffle fan-out choices),
+and the physical pipelines both execution backends run. ``explain()`` is
+the library entry point for the same rendering.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.engine import logical as logical_mod
+from repro.engine import optimizer
+from repro.engine.logical import LogicalQuery
+from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
+                                ShuffleOutput, TableInput)
+
+
+def _fmt_output(out) -> str:
+    if isinstance(out, ShuffleOutput):
+        return f"shuffle(by={out.partition_by}, partitions={out.partitions})"
+    if isinstance(out, CollectOutput):
+        return "collect"
+    return repr(out)
+
+
+def _fmt_input(inp) -> str:
+    if isinstance(inp, TableInput):
+        return f"table {inp.table} {inp.columns}"
+    return f"shuffle from {inp.from_pipeline}"
+
+
+def _fmt_op(op: dict) -> str:
+    kind = op["op"]
+    if kind == "filter":
+        return f"filter {op['expr']!r}"
+    if kind == "project":
+        return f"project {op['columns']!r}"
+    if kind == "hash_agg":
+        return f"hash_agg keys={op['keys']} aggs={op['aggs']}"
+    if kind == "hash_join":
+        return (f"hash_join probe.{op['left_key']} = "
+                f"build.{op['right_key']}")
+    if kind == "udf":
+        return f"udf {op['name']} kwargs={op.get('kwargs', {})}"
+    return repr(op)
+
+
+def format_pipeline(pipe: Pipeline) -> str:
+    lines = [f"{pipe.name}: {_fmt_input(pipe.input)} "
+             f"-> {_fmt_output(pipe.output)}"]
+    if pipe.input2 is not None:
+        lines.append(f"  build side: {_fmt_input(pipe.input2)}")
+    for op in pipe.ops:
+        lines.append(f"  {_fmt_op(op)}")
+    return "\n".join(lines)
+
+
+def format_physical(plan: QueryPlan) -> str:
+    return "\n".join(format_pipeline(p) for p in plan.pipelines)
+
+
+def explain(query: LogicalQuery, stats: Optional[optimizer.Stats] = None,
+            backend: str = "numpy") -> str:
+    plan, report = optimizer.lower(query, stats=stats, backend=backend)
+    sections = [
+        f"query: {query.name} (backend={backend})",
+        "",
+        "logical plan",
+        "============",
+        logical_mod.format_node(report.logical_root),
+        "",
+        "applied rules",
+        "=============",
+    ]
+    sections += [f"- {r}" for r in report.rules] or ["- (none)"]
+    sections += ["", "physical plan", "=============",
+                 format_physical(plan)]
+    return "\n".join(sections)
+
+
+def main(argv=None) -> int:
+    from repro.engine import queries
+
+    ap = argparse.ArgumentParser(
+        description="Show a query's logical plan, the optimizer rules "
+                    "applied, and the lowered physical pipelines.")
+    ap.add_argument("query", nargs="?", default="tpch_q12",
+                    help="query name (e.g. tpch_q1, tpch_q6, tpch_q12, "
+                         "tpcxbb_q3)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jit"],
+                    help="backend whose measured throughput drives "
+                         "fan-out choices")
+    ap.add_argument("--list", action="store_true",
+                    help="list available queries")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(queries.LOGICAL_BUILDERS):
+            print(name)
+        return 0
+    builder = queries.LOGICAL_BUILDERS.get(args.query)
+    if builder is None:
+        print(f"unknown query {args.query!r}; available: "
+              f"{sorted(queries.LOGICAL_BUILDERS)}", file=sys.stderr)
+        return 2
+    print(explain(builder(), backend=args.backend))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

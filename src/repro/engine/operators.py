@@ -16,7 +16,11 @@ from repro.engine.columnar import ColumnBatch
 # ---------------------------------------------------------------------------
 # Expressions: ["and", e1, e2] | ["lt", col, v] | ["ge", col, v]
 #   | ["between", col, lo, hi] | ["in", col, [v...]] | ["ltcol", c1, c2]
-#   | ["le", col, v] | ["eq", col, v]
+#   | ["le", col, v] | ["eq", col, v] | ["gt", col, v] | ["ne", col, v]
+#
+# The authoring surface for this grammar is ``engine.logical`` (typed
+# ``col``/``lit`` builders with operator overloads); plans may also carry
+# hand-written nested lists, which is what the wire format stays.
 # ---------------------------------------------------------------------------
 
 # Both backends share these evaluators: the numpy backend calls them as-is
@@ -41,8 +45,12 @@ def eval_expr(expr, batch, xp=np) -> np.ndarray:
         return batch[expr[1]] <= expr[2]
     if op == "ge":
         return batch[expr[1]] >= expr[2]
+    if op == "gt":
+        return batch[expr[1]] > expr[2]
     if op == "eq":
         return batch[expr[1]] == expr[2]
+    if op == "ne":
+        return batch[expr[1]] != expr[2]
     if op == "between":   # inclusive bounds, like TPC-H discount predicate
         c = batch[expr[1]]
         return (c >= expr[2]) & (c <= expr[3])
@@ -53,7 +61,9 @@ def eval_expr(expr, batch, xp=np) -> np.ndarray:
     raise ValueError(f"unknown expr op {op!r}")
 
 
-# Derived columns: ["mul", a, b] | ["add", a, b] | ["sub1", col] -> (1-col)
+# Derived columns: ["mul", a, b] | ["add", a, b] | ["sub", a, b]
+#   | ["div", a, b] | ["sub1", col] -> (1-col) | ["add1", col] -> (1+col)
+#   | ["case_in", col, [vals]] -> 1.0/0.0
 # where a/b are column names or ["const", v] or nested.
 def eval_value(expr, batch, xp=np) -> np.ndarray:
     if isinstance(expr, str):
@@ -65,6 +75,10 @@ def eval_value(expr, batch, xp=np) -> np.ndarray:
         return eval_value(expr[1], batch, xp) * eval_value(expr[2], batch, xp)
     if op == "add":
         return eval_value(expr[1], batch, xp) + eval_value(expr[2], batch, xp)
+    if op == "sub":
+        return eval_value(expr[1], batch, xp) - eval_value(expr[2], batch, xp)
+    if op == "div":
+        return eval_value(expr[1], batch, xp) / eval_value(expr[2], batch, xp)
     if op == "sub1":
         return 1.0 - eval_value(expr[1], batch, xp)
     if op == "add1":

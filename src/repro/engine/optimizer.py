@@ -1,0 +1,479 @@
+"""Optimizing planner: lowers the logical IR to physical pipelines.
+
+Rule-based passes over ``engine.logical`` trees, in order:
+
+1. **Predicate pushdown** — filter conjuncts move through projections
+   (rewriting renamed columns) and join sides down into the scans, so
+   workers drop rows before shuffling them (Lambada's first lesson: pay
+   object-store I/O for as few bytes as possible).
+2. **Projection pruning** — every scan's column list narrows to exactly
+   the columns referenced above it; bare ``scan("t")`` column lists are
+   inferred. UDF stages without a declared output schema keep their
+   explicit scan columns.
+3. **Aggregate split** — each ``hash_agg`` becomes a per-fragment partial
+   aggregate in the producing pipeline plus a final re-aggregation after
+   a combine shuffle; count partials re-aggregate as sums
+   (``logical.FINAL_AGG_FN``). This retires the hand-rolled
+   ``__zero__`` single-partition shuffle idiom: the combine shuffle
+   partitions by the first group key (or the first aggregate output for
+   global aggregates — any column works at fan-out 1).
+4. **Physical choices** — the join build side is the smaller estimated
+   input (probe keeps its storage order and the build side is the one
+   held in memory); shuffle fan-out is chosen so one partition is about
+   ``TARGET_PARTITION_SECONDS`` of work at the measured
+   ``core.bench_profile`` throughput (falling back to hand-set
+   constants), clamped to [1, MAX_SHUFFLE_PARTITIONS]. An explicit
+   ``LogicalQuery.shuffle_partitions`` hint pins the fan-out of ROW
+   shuffles (join co-partitioning); aggregate-combine shuffles are
+   optimizer-owned — the partial agg already shrank the data, so the
+   combine follows its own (small) estimate, and a global aggregate's
+   combine is always 1 partition (its partition key is a partial value,
+   not a grouping key).
+
+The emitted ``plans.QueryPlan`` uses only today's physical vocabulary, so
+the numpy and jit backends (including the fused join->ops->partition
+trace) run lowered plans unchanged. ``lower`` returns the plan plus a
+``PlanReport`` recording every applied rule (rendered by
+``engine.explain``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import bench_profile
+from repro.engine import logical
+from repro.engine.logical import (Aggregate, Filter, Join, LogicalError,
+                                  LogicalQuery, Project, Scan, Udf)
+from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
+                                ShuffleInput, ShuffleOutput, TableInput)
+
+MIB = 1024.0 ** 2
+
+# Physical-choice knobs. Fallback throughputs mirror the coordinator's
+# hand-set constants; when BENCH_engine.json is present the measured
+# numbers win (core.bench_profile).
+FALLBACK_CPU_BYTES_PER_S = {"numpy": 600e6, "jit": 1.5e9}
+TARGET_PARTITION_SECONDS = 0.25
+MAX_SHUFFLE_PARTITIONS = 64
+DEFAULT_SHUFFLE_PARTITIONS = 8      # no stats, no hint
+FILTER_SELECTIVITY = 0.2            # default per-filter row survival
+AGG_OUTPUT_FRACTION = 0.05          # partial-agg output / input estimate
+AGG_EST_OUTPUT_BYTES = 1.0 * MIB    # fallback when the input is unsized
+
+
+@dataclasses.dataclass
+class Stats:
+    """Planner-visible table statistics (bytes on the object store)."""
+    table_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def from_store(store, table_keys: dict[str, list[str]]) -> "Stats":
+        out = {}
+        for table, keys in table_keys.items():
+            try:
+                out[table] = float(sum(store.size(k) for k in keys))
+            except KeyError:
+                continue
+        return Stats(out)
+
+    def bytes_for(self, table: str) -> Optional[float]:
+        return self.table_bytes.get(table)
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """What the optimizer did: the rewritten logical tree plus one line
+    per applied rule, in application order."""
+    name: str
+    rules: list[str]
+    logical_root: object
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: predicate pushdown
+# ---------------------------------------------------------------------------
+
+def _conjuncts(pred: list) -> list[list]:
+    return list(pred[1:]) if pred[0] == "and" else [pred]
+
+
+def _combine(preds: list[list]) -> list:
+    return preds[0] if len(preds) == 1 else ["and"] + preds
+
+
+def _rename_pred(expr: list, m: dict) -> list:
+    op = expr[0]
+    if op in ("and", "or"):
+        return [op] + [_rename_pred(e, m) for e in expr[1:]]
+    if op == "ltcol":
+        return [op, m[expr[1]], m[expr[2]]]
+    return [op, m[expr[1]]] + list(expr[2:])
+
+
+def _wrap(node, stuck: list[tuple[list, bool]]):
+    if not stuck:
+        return node
+    return Filter(node, _combine([p for p, _ in stuck]))
+
+
+def _pushdown(node, preds: list[tuple[list, bool]], trace: list[str]):
+    """Place each (predicate, crossed-a-boundary) pair as deep as it can
+    go; record a rule line whenever a crossed predicate lands on a scan."""
+    if isinstance(node, Filter):
+        mine = [(c, False) for c in _conjuncts(node.predicate)]
+        return _pushdown(node.child, preds + mine, trace)
+    if isinstance(node, Scan):
+        if not preds:
+            return node
+        crossed = sum(1 for _, c in preds if c)
+        if crossed:
+            trace.append(f"predicate_pushdown: {crossed} conjunct(s) "
+                         f"pushed into scan({node.table})")
+        return Filter(node, _combine([p for p, _ in preds]))
+    if isinstance(node, Project):
+        bindings = {}
+        for c in node.columns:
+            if isinstance(c, str):
+                bindings[c] = c
+            elif isinstance(c[1], str):
+                bindings[c[0]] = c[1]           # pure rename
+        pushable, stuck = [], []
+        for p, crossed in preds:
+            cols = logical.pred_columns(p)
+            if cols <= set(bindings):
+                pushable.append((_rename_pred(p, bindings), True))
+            else:
+                stuck.append((p, crossed))
+        out = Project(_pushdown(node.child, pushable, trace), node.columns)
+        return _wrap(out, stuck)
+    if isinstance(node, Join):
+        ls, rs = logical.schema(node.left), logical.schema(node.right)
+        left, right, stuck = [], [], []
+        for p, crossed in preds:
+            cols = logical.pred_columns(p)
+            if ls is not None and cols <= set(ls):
+                left.append((p, True))
+            elif rs is not None and cols <= set(rs):
+                right.append((p, True))
+            else:
+                stuck.append((p, crossed))
+        out = Join(_pushdown(node.left, left, trace),
+                   _pushdown(node.right, right, trace),
+                   node.left_on, node.right_on)
+        return _wrap(out, stuck)
+    if isinstance(node, Aggregate):
+        out = Aggregate(_pushdown(node.child, [], trace), node.keys,
+                        node.aggs)
+        return _wrap(out, preds)
+    if isinstance(node, Udf):
+        out = dataclasses.replace(node,
+                                  child=_pushdown(node.child, [], trace))
+        return _wrap(out, preds)
+    raise TypeError(f"not a logical node: {node!r}")
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: projection pruning
+# ---------------------------------------------------------------------------
+
+def _prune(node, required: Optional[set], trace: list[str]):
+    """Narrow scans (and intermediate projections) to the columns the
+    plan above actually references. ``required=None`` means "everything"
+    (unknown consumer, e.g. below a UDF)."""
+    if isinstance(node, Scan):
+        if required is None:
+            if node.columns is None:
+                raise LogicalError(
+                    f"scan({node.table!r}) needs explicit columns: its "
+                    "consumer's column needs cannot be inferred (declare "
+                    "columns on the scan or output_columns on the UDF)")
+            return node
+        if node.columns is None:
+            cols = sorted(required)
+        else:
+            cols = [c for c in node.columns if c in required]
+        if node.columns is None or len(cols) < len(node.columns):
+            trace.append(f"projection_pruning: scan({node.table}) "
+                         f"columns -> {cols}")
+        return Scan(node.table, cols)
+    if isinstance(node, Filter):
+        need = None if required is None else \
+            required | logical.pred_columns(node.predicate)
+        return Filter(_prune(node.child, need, trace), node.predicate)
+    if isinstance(node, Project):
+        cols = node.columns
+        if required is not None:
+            kept = [c for c in cols
+                    if (c if isinstance(c, str) else c[0]) in required]
+            if len(kept) < len(cols):
+                trace.append(
+                    f"projection_pruning: project narrowed to "
+                    f"{[(c if isinstance(c, str) else c[0]) for c in kept]}")
+            cols = kept
+        return Project(_prune(node.child, logical.project_inputs(cols),
+                              trace), cols)
+    if isinstance(node, Join):
+        ls, rs = logical.schema(node.left), logical.schema(node.right)
+        if required is None or ls is None or rs is None:
+            lreq = rreq = None
+        else:
+            lreq = (required & set(ls)) | {node.left_on}
+            rreq = (required & set(rs)) | {node.right_on}
+        return Join(_prune(node.left, lreq, trace),
+                    _prune(node.right, rreq, trace),
+                    node.left_on, node.right_on)
+    if isinstance(node, Aggregate):
+        need = set(node.keys) | {a.column for a in node.aggs}
+        return Aggregate(_prune(node.child, need, trace), node.keys,
+                         node.aggs)
+    if isinstance(node, Udf):
+        # The UDF's input needs are opaque: keep the child's declared
+        # columns as-is.
+        return dataclasses.replace(node,
+                                   child=_prune(node.child, None, trace))
+    raise TypeError(f"not a logical node: {node!r}")
+
+
+# ---------------------------------------------------------------------------
+# Lowering to physical pipelines
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Pipe:
+    """A physical pipeline under construction."""
+    input: object
+    base_name: str
+    input2: Optional[ShuffleInput] = None
+    ops: list = dataclasses.field(default_factory=list)
+    schema: Optional[list[str]] = None
+    est_bytes: Optional[float] = None
+    has_join: bool = False
+    has_agg: bool = False
+
+
+class _Lowering:
+    def __init__(self, query: LogicalQuery, stats: Optional[Stats],
+                 backend: str, bench_path: Optional[str],
+                 trace: list[str]):
+        self.query = query
+        self.stats = stats or Stats()
+        self.backend = backend
+        self.bench_path = bench_path
+        self.trace = trace
+        self.pipelines: list[Pipeline] = []
+        self._names: dict[str, int] = {}
+
+    # -- naming / closing ---------------------------------------------------
+    def _unique(self, base: str) -> str:
+        n = self._names.get(base, 0)
+        self._names[base] = n + 1
+        return base if n == 0 else f"{base}_{n + 1}"
+
+    def _close(self, pipe: _Pipe, output) -> str:
+        base = pipe.base_name
+        if pipe.has_join:
+            base = "join_agg" if pipe.has_agg else "join"
+        name = self._unique(base)
+        self.pipelines.append(Pipeline(
+            name=name, input=pipe.input, ops=pipe.ops, output=output,
+            input2=pipe.input2))
+        return name
+
+    # -- physical choices ---------------------------------------------------
+    def _cpu_bw(self) -> float:
+        return bench_profile.cpu_bytes_per_s(
+            self.backend, FALLBACK_CPU_BYTES_PER_S[self.backend],
+            path=self.bench_path)
+
+    def _fanout(self, est_bytes: Optional[float], what: str,
+                allow_hint: bool = True) -> int:
+        if allow_hint and self.query.shuffle_partitions:
+            n = self.query.shuffle_partitions
+            self.trace.append(f"shuffle_fanout: {what} -> {n} partitions "
+                              f"(explicit hint)")
+            return n
+        if est_bytes is None:
+            n = DEFAULT_SHUFFLE_PARTITIONS
+            self.trace.append(f"shuffle_fanout: {what} -> {n} partitions "
+                              f"(no stats; default)")
+            return n
+        target = self._cpu_bw() * TARGET_PARTITION_SECONDS
+        n = max(1, min(MAX_SHUFFLE_PARTITIONS,
+                       math.ceil(est_bytes / target)))
+        self.trace.append(
+            f"shuffle_fanout: {what} -> {n} partitions "
+            f"(~{est_bytes / MIB:.1f} MiB at "
+            f"{self._cpu_bw() / MIB:.0f} MiB/s per {TARGET_PARTITION_SECONDS}s "
+            f"partition)")
+        return n
+
+    # -- tree walk ----------------------------------------------------------
+    def build(self, node) -> _Pipe:
+        if isinstance(node, Scan):
+            if node.columns is None:
+                raise LogicalError(
+                    f"scan({node.table!r}) reached lowering without "
+                    "columns; declare them or reference them upstream")
+            return _Pipe(input=TableInput(node.table, list(node.columns)),
+                         base_name=f"scan_{node.table}",
+                         schema=list(node.columns),
+                         est_bytes=self.stats.bytes_for(node.table))
+        if isinstance(node, Filter):
+            pipe = self.build(node.child)
+            pipe.ops.append({"op": "filter", "expr": node.predicate})
+            if pipe.est_bytes is not None:
+                pipe.est_bytes *= FILTER_SELECTIVITY
+            return pipe
+        if isinstance(node, Project):
+            pipe = self.build(node.child)
+            pipe.ops.append({"op": "project", "columns": node.columns})
+            new_schema = [c if isinstance(c, str) else c[0]
+                          for c in node.columns]
+            if pipe.est_bytes is not None and pipe.schema:
+                pipe.est_bytes *= len(new_schema) / max(1, len(pipe.schema))
+            pipe.schema = new_schema
+            return pipe
+        if isinstance(node, Udf):
+            pipe = self.build(node.child)
+            op = {"op": "udf", "name": node.name, "kwargs": node.kwargs}
+            if node.broadcast:
+                op["broadcast"] = node.broadcast
+            pipe.ops.append(op)
+            pipe.schema = list(node.output_columns) \
+                if node.output_columns else None
+            return pipe
+        if isinstance(node, Join):
+            return self._build_join(node)
+        if isinstance(node, Aggregate):
+            return self._build_aggregate(node)
+        raise TypeError(f"not a logical node: {node!r}")
+
+    def _build_join(self, node: Join) -> _Pipe:
+        left = self.build(node.left)
+        right = self.build(node.right)
+        # Build side: the smaller estimated input is held in memory;
+        # ties (and missing stats) keep the right side as build, which
+        # preserves the conventional fact-probes-dimension authoring
+        # order. The physical join drops the BUILD key from its output,
+        # so a swap flips which key column survives: downstream ops were
+        # authored against the logical schema (left cols + right cols
+        # minus right_on) and a reconciling projection restores it. That
+        # projection needs both schemas, so a swap with differently
+        # named keys is only taken when they are known.
+        swap = (left.est_bytes is not None and right.est_bytes is not None
+                and left.est_bytes < right.est_bytes)
+        if swap and node.left_on != node.right_on \
+                and (left.schema is None or right.schema is None):
+            swap = False
+        probe, build = (right, left) if swap else (left, right)
+        probe_on, build_on = (node.right_on, node.left_on) if swap \
+            else (node.left_on, node.right_on)
+        self.trace.append(
+            "join_build_side: build = "
+            + ("left" if swap else "right")
+            + f" ({_fmt_bytes(build.est_bytes)} vs probe "
+            + f"{_fmt_bytes(probe.est_bytes)})")
+        known = [e for e in (probe.est_bytes, build.est_bytes)
+                 if e is not None]
+        parts = self._fanout(max(known) if known else None,
+                             f"join on {probe_on}")
+        probe_name = self._close(probe, ShuffleOutput(probe_on, parts))
+        build_name = self._close(build, ShuffleOutput(build_on, parts))
+        ops = [{"op": "hash_join", "left_key": probe_on,
+                "right_key": build_on}]
+        # The logical contract, regardless of build side.
+        out_schema = logical.join_output_schema(left.schema, right.schema,
+                                                node.right_on)
+        if swap and node.left_on != node.right_on:
+            # Swapped physical output carries right_on instead of
+            # left_on (equal values — it is an equi-join): rename it
+            # back and restore the logical column order.
+            ops.append({"op": "project", "columns": [
+                [node.left_on, node.right_on] if c == node.left_on else c
+                for c in out_schema]})
+        pipe = _Pipe(input=ShuffleInput(probe_name),
+                     input2=ShuffleInput(build_name),
+                     base_name="join",
+                     ops=ops,
+                     schema=out_schema, est_bytes=probe.est_bytes,
+                     has_join=True)
+        return pipe
+
+    def _build_aggregate(self, node: Aggregate) -> _Pipe:
+        pipe = self.build(node.child)
+        partial = [[a.name, a.fn, a.column] for a in node.aggs]
+        pipe.ops.append({"op": "hash_agg", "keys": list(node.keys),
+                         "aggs": partial})
+        pipe.has_agg = True
+        out_cols = list(node.keys) + [a.name for a in node.aggs]
+        # Combine shuffle: partition by the first group key; a global
+        # aggregate has one row per fragment, so any produced column
+        # works at the computed (small) fan-out — no synthetic __zero__
+        # column needed.
+        combine_key = node.keys[0] if node.keys else node.aggs[0].name
+        # Partial aggregation shrinks the data by roughly the group
+        # cardinality; estimate the combine input as a fraction of the
+        # pre-agg bytes so genuinely large grouped inputs (high-
+        # cardinality keys at paper scale) still fan their combine out.
+        est_out = AGG_EST_OUTPUT_BYTES if pipe.est_bytes is None \
+            else pipe.est_bytes * AGG_OUTPUT_FRACTION
+        if node.keys:
+            # Combine shuffles are optimizer-owned: the fan-out follows
+            # the partial-output estimate, NOT the row-shuffle hint — a
+            # wide hinted combine would schedule mostly-empty final
+            # fragments and multiply shuffle-read probes for nothing.
+            parts = self._fanout(est_out,
+                                 f"aggregate combine on {combine_key}",
+                                 allow_hint=False)
+        else:
+            # A global aggregate MUST combine in one fragment (its
+            # partition key is a partial value, not a grouping key) —
+            # never let the cost model fan it out.
+            parts = 1
+            self.trace.append(f"shuffle_fanout: global-aggregate combine "
+                              f"on {combine_key} -> 1 partition (forced)")
+        name = self._close(pipe, ShuffleOutput(combine_key, parts))
+        final = [[a.name, logical.FINAL_AGG_FN[a.fn], a.name]
+                 for a in node.aggs]
+        self.trace.append(
+            f"agg_split: partial hash_agg in '{name}', final combine "
+            "re-aggregates partials (count -> sum) downstream")
+        return _Pipe(input=ShuffleInput(name), base_name="final_agg",
+                     ops=[{"op": "hash_agg", "keys": list(node.keys),
+                           "aggs": final}],
+                     schema=out_cols, est_bytes=est_out, has_agg=True)
+
+
+def _fmt_bytes(b: Optional[float]) -> str:
+    return "unknown size" if b is None else f"~{b / MIB:.1f} MiB"
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def lower(query: LogicalQuery, stats: Optional[Stats] = None,
+          backend: str = "numpy", bench_path: Optional[str] = None
+          ) -> tuple[QueryPlan, PlanReport]:
+    """Optimize and lower a logical query. Returns the physical plan plus
+    the report of applied rules (see ``engine.explain``)."""
+    trace: list[str] = []
+    root = _pushdown(query.root, [], trace)
+    root = _prune(root, None, trace)
+    low = _Lowering(query, stats, backend, bench_path, trace)
+    pipe = low.build(root)
+    low._close(pipe, CollectOutput())
+    plan = QueryPlan(query.name, low.pipelines)
+    plan.validate()
+    return plan, PlanReport(query.name, trace, root)
+
+
+def plan(query: LogicalQuery, stats: Optional[Stats] = None,
+         backend: str = "numpy",
+         bench_path: Optional[str] = None) -> QueryPlan:
+    """``lower`` without the report — the one-call path for query
+    builders."""
+    return lower(query, stats=stats, backend=backend,
+                 bench_path=bench_path)[0]

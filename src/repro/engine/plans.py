@@ -26,12 +26,21 @@ Other ops: {"op": "filter", "expr": [...]} | {"op": "project", "columns":
 [name | [name, value-expr], ...]} | {"op": "hash_agg", "keys": [...],
 "aggs": [[out, fn, col], ...]} | {"op": "udf", "name": ..., "kwargs": ...,
 "broadcast": {...}} (see ``operators.py`` for expression grammar).
+
+Plans are rarely hand-built anymore: ``engine.logical`` provides the
+typed expression/plan builder and ``engine.optimizer`` lowers it to this
+physical vocabulary (predicate pushdown, projection pruning, partial/
+final aggregate splitting, build-side + fan-out selection). Hand-built
+plans remain first-class — ``QueryPlan.validate()`` fail-fast checks
+both kinds before the coordinator schedules a single fragment.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 from typing import Optional
+
+from repro.engine import logical
 
 
 @dataclasses.dataclass
@@ -78,10 +87,138 @@ class Pipeline:
         return out
 
 
+KNOWN_OPS = ("filter", "project", "hash_agg", "hash_join", "udf")
+
+
+class PlanValidationError(ValueError):
+    """A malformed physical plan, caught before any fragment runs."""
+
+
+def _op_input_columns(op: dict) -> Optional[set]:
+    """Columns an op reads from its input batch, or None when opaque
+    (UDFs). Uses the logical layer's grammar walkers so plan validation
+    and the planner cannot drift on the expression grammar."""
+    kind = op.get("op")
+    if kind == "filter":
+        return logical.pred_columns(op["expr"])
+    if kind == "project":
+        return logical.project_inputs(op["columns"])
+    if kind == "hash_agg":
+        return set(op["keys"]) | {col for _, fn, col in op["aggs"]
+                                  if fn != "count"}
+    if kind == "hash_join":
+        return {op["left_key"]}
+    return None
+
+
+def _pipeline_schema(pipe: "Pipeline", schemas: dict,
+                     errors: Optional[list] = None) -> Optional[list]:
+    """Walk a pipeline's ops advancing the (ordered) output schema;
+    returns the output columns, or None when unknowable (UDF ops,
+    unknown upstream schema). ``schemas`` maps pipeline name -> schema.
+    When ``errors`` is given, validation problems found along the walk
+    (unknown ops, op inputs / join keys / legacy-join specs referencing
+    columns nothing upstream produces) are appended — one walk serves
+    both schema inference and validation, so the two cannot drift."""
+    def err(msg: str) -> None:
+        if errors is not None:
+            errors.append(f"pipeline {pipe.name!r}: {msg}")
+
+    if isinstance(pipe.input, TableInput):
+        cols = list(pipe.input.columns)
+    else:
+        known = schemas.get(pipe.input.from_pipeline)
+        cols = None if known is None else list(known)
+    ops = list(pipe.ops)
+    if pipe.join is not None:   # legacy spec: leading hash_join
+        ops.insert(0, {"op": "hash_join", **pipe.join})
+    for op in ops:
+        kind = op.get("op")
+        if kind not in KNOWN_OPS:
+            err(f"unknown op {kind!r}")
+            continue
+        needs = _op_input_columns(op)
+        if cols is not None and needs is not None \
+                and not needs <= set(cols):
+            err(f"{kind} op reads column(s) {sorted(needs - set(cols))} "
+                f"not produced upstream (have {sorted(cols)})")
+        if kind == "project":
+            cols = [c if isinstance(c, str) else c[0] for c in op["columns"]]
+        elif kind == "hash_agg":
+            cols = list(op["keys"]) + [a[0] for a in op["aggs"]]
+        elif kind == "hash_join":
+            build = None if pipe.input2 is None else \
+                schemas.get(pipe.input2.from_pipeline)
+            if build is not None and op.get("right_key") not in build:
+                err(f"hash_join right_key {op.get('right_key')!r} not "
+                    f"produced by build side (have {sorted(build)})")
+            cols = logical.join_output_schema(cols, build,
+                                              op.get("right_key"))
+        elif kind == "udf":
+            cols = None
+        # filter: schema unchanged
+    return cols
+
+
 @dataclasses.dataclass
 class QueryPlan:
     name: str
     pipelines: list[Pipeline]
+
+    def validate(self) -> None:
+        """Fail-fast structural checks, run by the coordinator before
+        scheduling: duplicate pipeline names, dangling or out-of-order
+        ``ShuffleInput.from_pipeline`` references, unknown op names,
+        ``hash_join`` without a build-side ``input2``, op inputs and
+        shuffle partition keys no upstream op produces, and a terminal
+        pipeline that never collects. Raises ``PlanValidationError`` listing every problem —
+        these misfires otherwise surface as opaque KeyErrors deep in
+        ``worker.py``."""
+        errors: list[str] = []
+        if not self.pipelines:
+            raise PlanValidationError(f"plan {self.name!r} has no pipelines")
+        by_name = {q.name: q for q in self.pipelines}
+        seen: list[str] = []
+        for p in self.pipelines:
+            if p.name in seen:
+                errors.append(f"duplicate pipeline name {p.name!r}")
+            for dep in p.deps():
+                if dep not in seen:
+                    tag = "dangling" if dep not in by_name else \
+                        "out-of-order (must be defined earlier)"
+                    errors.append(f"pipeline {p.name!r}: {tag} shuffle "
+                                  f"input from_pipeline={dep!r}")
+                elif not isinstance(by_name[dep].output, ShuffleOutput):
+                    # A collect-output producer never writes shuffle
+                    # objects: the consumer would read nothing, silently
+                    # (missing_ok) on the build side.
+                    errors.append(
+                        f"pipeline {p.name!r}: shuffle input reads "
+                        f"{dep!r}, which does not produce a shuffle "
+                        f"output ({type(by_name[dep].output).__name__})")
+            seen.append(p.name)
+        schemas: dict = {}
+        for p in self.pipelines:
+            has_join = p.join is not None or \
+                any(op.get("op") == "hash_join" for op in p.ops)
+            if has_join and p.input2 is None:
+                errors.append(f"pipeline {p.name!r}: hash_join without a "
+                              "build-side input2")
+            schema = _pipeline_schema(p, schemas, errors)
+            schemas[p.name] = schema
+            if isinstance(p.output, ShuffleOutput) and schema is not None \
+                    and p.output.partition_by not in schema:
+                errors.append(
+                    f"pipeline {p.name!r}: shuffle partition key "
+                    f"{p.output.partition_by!r} is not produced upstream "
+                    f"(have {schema})")
+        if not isinstance(self.pipelines[-1].output, CollectOutput):
+            errors.append(f"terminal pipeline "
+                          f"{self.pipelines[-1].name!r} must collect "
+                          "(the coordinator merges its fragments)")
+        if errors:
+            raise PlanValidationError(
+                f"invalid plan {self.name!r}:\n  " + "\n  ".join(errors))
 
     def to_json(self) -> str:
         def default(o):

@@ -2,17 +2,25 @@
 
 I/O-heavy queries chosen by the paper to expose resource behaviour: Q1/Q6
 select-project-aggregate, Q12 and Q3 join with broad operator sets
-including UDFs. Each builder returns a (QueryPlan, finalize) pair, plus a
-pure-numpy reference implementation for correctness tests.
+including UDFs. Each query is authored on the logical builder
+(``engine.logical``) and lowered through the optimizer
+(``engine.optimizer``) into the physical plan the coordinator schedules:
+``qX_logical`` returns the declarative ``LogicalQuery``; ``qX_plan``
+lowers it (projection pruning, predicate pushdown, partial/final
+aggregate split, build-side + fan-out selection) for callers that want
+the physical ``QueryPlan`` directly. Pure-numpy reference
+implementations ride along for correctness tests; the pre-logical
+hand-built plans live on as golden parity fixtures in
+``tests/golden_plans.py``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.engine import datagen
+from repro.engine import datagen, optimizer
 from repro.engine.columnar import ColumnBatch
-from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
-                                ShuffleInput, ShuffleOutput, TableInput)
+from repro.engine.logical import LogicalQuery, col, count_, scan, sum_
+from repro.engine.plans import QueryPlan
 
 # dictionary codes (columnar.DICTIONARIES)
 MAIL, SHIP = 2, 5
@@ -24,38 +32,25 @@ VIEW, PURCHASE = 0, 2
 # TPC-H Q6 — scan-heavy filter + global aggregate
 # ---------------------------------------------------------------------------
 
+def q6_logical(shipdate_lo: int = datagen.DATE_1994_01_01,
+               discount: float = 0.06,
+               quantity: float = 24.0) -> LogicalQuery:
+    return (
+        scan("lineitem")
+        .filter((col("l_shipdate") >= shipdate_lo)
+                & (col("l_shipdate") < shipdate_lo + 365)
+                & col("l_discount").between(round(discount - 0.01, 2),
+                                            round(discount + 0.01, 2))
+                & (col("l_quantity") < quantity))
+        .select((col("l_extendedprice") * col("l_discount"))
+                .alias("revenue"))
+        .agg(sum_("revenue").alias("revenue"))
+        .collect("tpch_q6"))
+
+
 def q6_plan(shipdate_lo: int = datagen.DATE_1994_01_01,
             discount: float = 0.06, quantity: float = 24.0) -> QueryPlan:
-    pred = ["and",
-            ["ge", "l_shipdate", shipdate_lo],
-            ["lt", "l_shipdate", shipdate_lo + 365],
-            ["between", "l_discount", round(discount - 0.01, 2),
-             round(discount + 0.01, 2)],
-            ["lt", "l_quantity", quantity]]
-    scan = Pipeline(
-        name="scan_lineitem",
-        input=TableInput("lineitem", ["l_shipdate", "l_discount",
-                                      "l_quantity", "l_extendedprice"]),
-        ops=[{"op": "filter", "expr": pred},
-             {"op": "project",
-              "columns": [["revenue", ["mul", "l_extendedprice",
-                                       "l_discount"]]]},
-             {"op": "hash_agg", "keys": [],
-              "aggs": [["revenue", "sum", "revenue"]]}],
-        output=CollectOutput())
-    final = Pipeline(
-        name="final_agg",
-        input=ShuffleInput("scan_lineitem"),
-        ops=[{"op": "hash_agg", "keys": [],
-              "aggs": [["revenue", "sum", "revenue"]]}],
-        output=CollectOutput())
-    # scan collects partials; final reads collected results: model as a
-    # 1-partition shuffle for uniformity.
-    scan.output = ShuffleOutput(partition_by="__zero__", partitions=1)
-    scan.ops.append({"op": "project",
-                     "columns": ["revenue",
-                                 ["__zero__", ["const", 0]]]})
-    return QueryPlan("tpch_q6", [scan, final])
+    return optimizer.plan(q6_logical(shipdate_lo, discount, quantity))
 
 
 def q6_reference(lineitem: ColumnBatch,
@@ -74,43 +69,31 @@ def q6_reference(lineitem: ColumnBatch,
 # TPC-H Q1 — scan-heavy grouped aggregation
 # ---------------------------------------------------------------------------
 
-_Q1_AGGS = [["sum_qty", "sum", "l_quantity"],
-            ["sum_base_price", "sum", "l_extendedprice"],
-            ["sum_disc_price", "sum", "disc_price"],
-            ["sum_charge", "sum", "charge"],
-            ["sum_disc", "sum", "l_discount"],
-            ["count_order", "count", "l_quantity"]]
+def q1_logical(delta_days: int = 90) -> LogicalQuery:
+    cutoff = datagen.DATE_MAX - delta_days
+    disc_price = col("l_extendedprice") * (1 - col("l_discount"))
+    charge = (col("l_extendedprice") * (1 - col("l_discount"))) \
+        * (1 + col("l_tax"))
+    return (
+        scan("lineitem")
+        .filter(col("l_shipdate") <= cutoff)
+        .select("l_returnflag", "l_linestatus", "l_quantity",
+                "l_extendedprice", "l_discount",
+                disc_price.alias("disc_price"), charge.alias("charge"))
+        .group_by("l_returnflag", "l_linestatus")
+        .agg(sum_("l_quantity").alias("sum_qty"),
+             sum_("l_extendedprice").alias("sum_base_price"),
+             sum_("disc_price").alias("sum_disc_price"),
+             sum_("charge").alias("sum_charge"),
+             sum_("l_discount").alias("sum_disc"),
+             # Count partials re-aggregate as sums downstream — the
+             # optimizer's agg-split pass owns that mapping.
+             count_("l_quantity").alias("count_order"))
+        .collect("tpch_q1"))
 
 
 def q1_plan(delta_days: int = 90) -> QueryPlan:
-    cutoff = datagen.DATE_MAX - delta_days
-    scan = Pipeline(
-        name="scan_lineitem",
-        input=TableInput("lineitem", ["l_shipdate", "l_quantity",
-                                      "l_extendedprice", "l_discount",
-                                      "l_tax", "l_returnflag",
-                                      "l_linestatus"]),
-        ops=[{"op": "filter", "expr": ["le", "l_shipdate", cutoff]},
-             {"op": "project", "columns": [
-                 "l_returnflag", "l_linestatus", "l_quantity",
-                 "l_extendedprice", "l_discount",
-                 ["disc_price", ["mul", "l_extendedprice",
-                                 ["sub1", "l_discount"]]],
-                 ["charge", ["mul", ["mul", "l_extendedprice",
-                                     ["sub1", "l_discount"]],
-                             ["add1", "l_tax"]]]]},
-             {"op": "hash_agg", "keys": ["l_returnflag", "l_linestatus"],
-              "aggs": _Q1_AGGS}],
-        output=ShuffleOutput(partition_by="l_returnflag", partitions=1))
-    final_aggs = [[name, "sum" if fn != "count" else "sum", name]
-                  for name, fn, _ in _Q1_AGGS]
-    final = Pipeline(
-        name="final_agg",
-        input=ShuffleInput("scan_lineitem"),
-        ops=[{"op": "hash_agg", "keys": ["l_returnflag", "l_linestatus"],
-              "aggs": final_aggs}],
-        output=CollectOutput())
-    return QueryPlan("tpch_q1", [scan, final])
+    return optimizer.plan(q1_logical(delta_days))
 
 
 def q1_reference(lineitem: ColumnBatch, delta_days: int = 90) -> ColumnBatch:
@@ -140,55 +123,32 @@ def q1_reference(lineitem: ColumnBatch, delta_days: int = 90) -> ColumnBatch:
 # TPC-H Q12 — join + grouped conditional aggregation (shuffle-heavy)
 # ---------------------------------------------------------------------------
 
+def q12_logical(shuffle_partitions: int | None = 8,
+                year_lo: int = datagen.DATE_1994_01_01) -> LogicalQuery:
+    lineitem = (
+        scan("lineitem")
+        .filter(col("l_shipmode").isin([MAIL, SHIP])
+                & (col("l_commitdate") < col("l_receiptdate"))
+                & (col("l_shipdate") < col("l_commitdate"))
+                & (col("l_receiptdate") >= year_lo)
+                & (col("l_receiptdate") < year_lo + 365))
+        .select("l_orderkey", "l_shipmode"))
+    orders = scan("orders").select("o_orderkey", "o_orderpriority")
+    high = col("o_orderpriority").case_in([URGENT, HIGH])
+    return (
+        lineitem
+        .join(orders, on=("l_orderkey", "o_orderkey"))
+        .select("l_shipmode", high.alias("high_line"),
+                (1 - high).alias("low_line"))
+        .group_by("l_shipmode")
+        .agg(sum_("high_line").alias("high_line_count"),
+             sum_("low_line").alias("low_line_count"))
+        .collect("tpch_q12", shuffle_partitions=shuffle_partitions))
+
+
 def q12_plan(shuffle_partitions: int = 8,
              year_lo: int = datagen.DATE_1994_01_01) -> QueryPlan:
-    li_scan = Pipeline(
-        name="scan_lineitem",
-        input=TableInput("lineitem", ["l_orderkey", "l_shipmode",
-                                      "l_shipdate", "l_commitdate",
-                                      "l_receiptdate"]),
-        ops=[{"op": "filter", "expr": ["and",
-              ["in", "l_shipmode", [MAIL, SHIP]],
-              ["ltcol", "l_commitdate", "l_receiptdate"],
-              ["ltcol", "l_shipdate", "l_commitdate"],
-              ["ge", "l_receiptdate", year_lo],
-              ["lt", "l_receiptdate", year_lo + 365]]},
-             {"op": "project", "columns": ["l_orderkey", "l_shipmode"]}],
-        output=ShuffleOutput(partition_by="l_orderkey",
-                             partitions=shuffle_partitions))
-    o_scan = Pipeline(
-        name="scan_orders",
-        input=TableInput("orders", ["o_orderkey", "o_orderpriority"]),
-        ops=[{"op": "project", "columns": ["o_orderkey", "o_orderpriority"]}],
-        output=ShuffleOutput(partition_by="o_orderkey",
-                             partitions=shuffle_partitions))
-    join = Pipeline(
-        name="join_agg",
-        input=ShuffleInput("scan_lineitem"),
-        input2=ShuffleInput("scan_orders"),
-        ops=[{"op": "hash_join", "left_key": "l_orderkey",
-              "right_key": "o_orderkey"},
-             {"op": "project", "columns": [
-                 "l_shipmode",
-                 ["high_line", ["case_in", "o_orderpriority",
-                                [URGENT, HIGH]]],
-                 ["low_line", ["sub1", ["case_in", "o_orderpriority",
-                                        [URGENT, HIGH]]]]]},
-             {"op": "hash_agg", "keys": ["l_shipmode"],
-              "aggs": [["high_line_count", "sum", "high_line"],
-                       ["low_line_count", "sum", "low_line"]]},
-             {"op": "project", "columns": [
-                 "l_shipmode", "high_line_count", "low_line_count",
-                 ["__zero__", ["const", 0]]]}],
-        output=ShuffleOutput(partition_by="__zero__", partitions=1))
-    final = Pipeline(
-        name="final_agg",
-        input=ShuffleInput("join_agg"),
-        ops=[{"op": "hash_agg", "keys": ["l_shipmode"],
-              "aggs": [["high_line_count", "sum", "high_line_count"],
-                       ["low_line_count", "sum", "low_line_count"]]}],
-        output=CollectOutput())
-    return QueryPlan("tpch_q12", [li_scan, o_scan, join, final])
+    return optimizer.plan(q12_logical(shuffle_partitions, year_lo))
 
 
 def q12_reference(lineitem: ColumnBatch, orders: ColumnBatch,
@@ -219,28 +179,32 @@ def q12_reference(lineitem: ColumnBatch, orders: ColumnBatch,
 # TPCx-BB Q3 — MapReduce-style UDF job over clickstreams
 # ---------------------------------------------------------------------------
 
+def bb_q3_logical(item_table_key: str, target_category: int = 3,
+                  window: int = 5,
+                  shuffle_partitions: int | None = 8) -> LogicalQuery:
+    """``shuffle_partitions`` only pins row shuffles; this query has
+    none after the agg-split optimization (the map pipeline partially
+    aggregates, so the combine fan-out is optimizer-owned)."""
+    return (
+        scan("clickstreams", ["wcs_user_sk", "wcs_click_date_sk",
+                              "wcs_click_time_sk", "wcs_item_sk",
+                              "wcs_click_type"])
+        .map_udf("clicks_before_purchase",
+                 kwargs={"target_category": target_category,
+                         "window": window},
+                 broadcast={"item_categories": {"key": item_table_key,
+                                                "column": "i_category_id"}},
+                 output_columns=["viewed_item", "n"])
+        .group_by("viewed_item")
+        .agg(sum_("n").alias("views"))
+        .collect("tpcxbb_q3", shuffle_partitions=shuffle_partitions))
+
+
 def bb_q3_plan(item_table_key: str, target_category: int = 3,
                window: int = 5, shuffle_partitions: int = 8,
                top_k: int = 10) -> QueryPlan:
-    map_pipe = Pipeline(
-        name="map_clicks",
-        input=TableInput("clickstreams", ["wcs_user_sk", "wcs_click_date_sk",
-                                          "wcs_click_time_sk", "wcs_item_sk",
-                                          "wcs_click_type"]),
-        ops=[{"op": "udf", "name": "clicks_before_purchase",
-              "kwargs": {"target_category": target_category,
-                         "window": window},
-              "broadcast": {"item_categories": {"key": item_table_key,
-                                                "column": "i_category_id"}}}],
-        output=ShuffleOutput(partition_by="viewed_item",
-                             partitions=shuffle_partitions))
-    reduce_pipe = Pipeline(
-        name="reduce_counts",
-        input=ShuffleInput("map_clicks"),
-        ops=[{"op": "hash_agg", "keys": ["viewed_item"],
-              "aggs": [["views", "sum", "n"]]}],
-        output=CollectOutput())
-    return QueryPlan("tpcxbb_q3", [map_pipe, reduce_pipe])
+    return optimizer.plan(bb_q3_logical(item_table_key, target_category,
+                                        window, shuffle_partitions))
 
 
 def bb_q3_reference(clicks: ColumnBatch, item: ColumnBatch,
@@ -266,4 +230,18 @@ QUERY_BUILDERS = {
     "q1": q1_plan,
     "q6": q6_plan,
     "q12": q12_plan,
+}
+
+# Logical builders by canonical name (and short alias) for tooling such
+# as ``python -m repro.engine.explain``. TPCx-BB Q3 needs a broadcast
+# item-table key; tooling passes a placeholder.
+LOGICAL_BUILDERS = {
+    "tpch_q1": q1_logical,
+    "tpch_q6": q6_logical,
+    "tpch_q12": q12_logical,
+    "q1": q1_logical,
+    "q6": q6_logical,
+    "q12": q12_logical,
+    "tpcxbb_q3": lambda: bb_q3_logical("tables/item/part-00000"),
+    "bb_q3": lambda: bb_q3_logical("tables/item/part-00000"),
 }
