@@ -14,7 +14,12 @@
 * the ``planning`` section's ``overhead_frac`` (logical->physical
   lowering cost over an end-to-end Q12 run) must stay under
   ``PLANNING_OVERHEAD_MAX`` — the optimizer is supposed to be free
-  relative to the queries it plans.
+  relative to the queries it plans;
+* ``--require-section NAME[,NAME...]`` (repeatable) asserts that each
+  named section exists in the current results AND contains at least one
+  speedup entry — so a refactor cannot silently drop a benchmark the PR
+  acceptance depends on (e.g.
+  ``--require-section join_pipeline,partition_fusion``).
 
 Exit code 0 when clean, 1 with a per-metric report otherwise. Use
 ``--current FILE`` to gate freshly produced results instead of the
@@ -56,12 +61,27 @@ def load_committed_baseline() -> dict | None:
         return None
 
 
-def check(current: dict, baseline: dict | None,
-          tolerance: float) -> list[str]:
+def check_required_sections(current: dict,
+                            required: list[str]) -> list[str]:
+    """Each required section must exist and record >= 1 speedup entry."""
     failures = []
+    for name in required:
+        section = current.get(name)
+        if not isinstance(section, dict):
+            failures.append(f"required section {name!r} is missing from "
+                            "the results")
+        elif not collect_speedups(section):
+            failures.append(f"required section {name!r} records no "
+                            "speedup entry")
+    return failures
+
+
+def check(current: dict, baseline: dict | None, tolerance: float,
+          required_sections: list[str] | None = None) -> list[str]:
+    failures = check_required_sections(current, required_sections or [])
     speedups = collect_speedups(current)
     if not speedups:
-        return ["no speedup entries found in current results"]
+        return failures + ["no speedup entries found in current results"]
     base_speedups = collect_speedups(baseline) if baseline else {}
     for name, value in sorted(speedups.items()):
         if value < 1.0:
@@ -97,7 +117,14 @@ def main(argv=None) -> int:
                          "(default 0.5)")
     ap.add_argument("--run", action="store_true",
                     help="run benchmarks.engine_bench first")
+    ap.add_argument("--require-section", action="append", default=[],
+                    metavar="NAME[,NAME...]",
+                    help="fail unless each named result section exists "
+                         "and records a speedup (repeatable, "
+                         "comma-separable)")
     args = ap.parse_args(argv)
+    required = [s for arg in args.require_section
+                for s in arg.split(",") if s]
 
     if args.run:
         from benchmarks import engine_bench
@@ -109,7 +136,8 @@ def main(argv=None) -> int:
     else:
         baseline = load_committed_baseline()
 
-    failures = check(current, baseline, args.tolerance)
+    failures = check(current, baseline, args.tolerance,
+                     required_sections=required)
     speedups = collect_speedups(current)
     for name, value in sorted(speedups.items()):
         print(f"  {name}: {value:.3f}x")

@@ -3,6 +3,11 @@ inspect what the optimizer does to it, and run it on the serverless
 engine in both execution backends.
 
     PYTHONPATH=src python examples/logical_api_quickstart.py
+
+The engine defaults to the compiled "jit" backend; "numpy" is the
+interpreted float64 reference (expect the aggregate results below to
+agree to ~6 significant digits — the rtol=1e-6 float contract in
+docs/BACKENDS.md). docs/ARCHITECTURE.md walks the whole engine.
 """
 import numpy as np
 

@@ -10,6 +10,13 @@ yourself via ``engine.optimizer``. ``QueryPlan`` remains the physical
 interchange format. ``python -m repro.engine.explain <query>`` shows a
 query's logical plan, the applied optimizer rules, and the physical
 pipelines.
+
+Execution runs on the compiled ``jit`` backend by default;
+``backend="numpy"`` selects the interpreted float64 semantic reference.
+``docs/BACKENDS.md`` documents the backend contract (float tolerances,
+the remaining jit->numpy fallback cases, forcing a backend per query);
+``docs/ARCHITECTURE.md`` is the full engine walkthrough (logical
+builder -> optimizer -> physical plans -> compiled kernels).
 """
 from repro.engine import (columnar, compile, coordinator,  # noqa: F401
                           datagen, logical, operators, optimizer,

@@ -24,6 +24,20 @@ specs into fused kernels:
   columns in their original dtype (no f64->f32 round-trip for data the
   trace never computes on). Each output column is gathered exactly once;
   the writer receives contiguous per-partition slices.
+* Duplicate build keys stay compiled: a counts/prefix-sum pass over the
+  bucketed range probe (``sorted_probe_range``) measures each probe
+  row's match multiplicity, and a second traced call expands the
+  multiplicity (``searchsorted`` over the prefix sums recovers, per
+  output row, its probe row and build position), evaluates the
+  downstream ops over the expanded rows, and assigns partitions — SQL
+  inner-join semantics identical to ``op_hash_join``, in-trace.
+* A trailing ``hash_agg`` no longer splits a shuffle fragment's trace:
+  when the partition key is one of the agg's group keys, the partition
+  assignment commutes with the (per-fragment, partial) aggregation, so
+  the preceding ``[hash_join?] + (filter|project)*`` segment fuses WITH
+  the partition assignment into one traced call and the aggregation then
+  runs per partition slice — partial pre-agg shuffle plans (the
+  optimizer's agg split) execute as one traced call per segment.
 * ``hash_agg`` lexsorts the group keys and hands the aggregate columns to
   the Pallas segmented-reduction kernel (``kernels.segment_reduce``),
   stacked so all same-mode aggregates reduce in a single kernel launch —
@@ -36,18 +50,20 @@ Fragments call ``run_pipeline_partition`` so the shuffle partition fuses
 into the trailing compiled segment on the jit backend; the numpy backend
 keeps the interpreted operators plus ``operators.radix_partition`` as the
 semantic reference. Joins whose key or referenced columns overflow the
-int32 jit boundary, and build sides with duplicate keys (the compiled
-probe returns one position per key), fall back to ``op_hash_join`` with
-identical semantics.
+int32 jit boundary fall back to ``op_hash_join`` with identical semantics
+(with a loud one-time ``RuntimeWarning`` — the fallback is correct but
+interpreted).
 
 Compiled segments are cached on the JSON text of their specs, so the many
 fragments of one pipeline share a single compilation.
 
-Float caveat: XLA executes in float32 here (x64 stays disabled for the
-model stack), so aggregates can differ from the float64 numpy backend in
-the last ~2 decimal digits (the parity suite pins the tolerance), and a
-float64 value within float32 epsilon of a predicate constant can land on
-the other side of a fused filter — row sets may differ at such knife-edge
+Float contract (this backend is the DEFAULT; ``docs/BACKENDS.md`` is the
+user-facing version): XLA executes in float32 here (x64 stays disabled
+for the model stack), but aggregate sums accumulate PAIRWISE in the
+segmented-reduction kernel, so aggregates match the float64 numpy backend
+at rtol=1e-6 (the parity suite pins that tolerance). A float64 value
+within float32 epsilon of a predicate constant can still land on the
+other side of a fused filter — row sets may differ at such knife-edge
 boundaries (TPC data is quantized to 2 decimals, far coarser than that).
 Integer columns likewise narrow to int32 at the jit boundary — fused
 segments whose referenced int64 columns hold values beyond int32 range,
@@ -60,6 +76,7 @@ from __future__ import annotations
 
 import functools
 import json
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -274,6 +291,26 @@ def _compile_segment(segment_json: str):
 _INT32_MAX = np.iinfo(np.int32).max
 _INT32_MIN = np.iinfo(np.int32).min
 
+# The int32 fallback warning fires once per process: silent per-fragment
+# warnings would flood a query's log, silence would hide that a "jit"
+# query is quietly running its joins interpreted.
+_INT32_FALLBACK_WARNED = False
+
+
+def _warn_int32_fallback(detail: str) -> None:
+    global _INT32_FALLBACK_WARNED
+    if _INT32_FALLBACK_WARNED:
+        return
+    _INT32_FALLBACK_WARNED = True
+    warnings.warn(
+        "jit backend: a compiled hash_join fell back to the interpreted "
+        f"numpy reference ({detail}). The compiled probe narrows keys "
+        "and referenced columns to int32; wider values execute on numpy "
+        "instead — results are identical but the fragment runs at "
+        "interpreted speed. Emitted once per process; see "
+        "docs/BACKENDS.md for the full fallback matrix.",
+        RuntimeWarning, stacklevel=2)
+
 
 def _overflows_int32(v: np.ndarray) -> bool:
     if v.dtype.kind not in "iu" or v.size == 0:
@@ -315,6 +352,17 @@ def _run_fused(batch: ColumnBatch, segment: list[dict]) -> ColumnBatch:
 # argsort and gathers each surviving output column exactly once — from
 # the ORIGINAL arrays for pass-through columns (dtype preserved) and from
 # the trace outputs for derived ones.
+#
+# Duplicate build keys take a two-trace variant of the same shape (the
+# output row count is data-dependent, so it must cross the host once):
+# trace 1 range-probes every key (``sorted_probe_range``) and returns the
+# per-row match multiplicity; the host prefix-sums the counts (the only
+# host step — one cumsum); trace 2 expands the multiplicity in-trace
+# (``searchsorted`` over the prefix recovers each output row's probe row
+# ``i`` and build position ``lo[i] + offset``), evaluates the downstream
+# ops over the expanded rows, and assigns partitions. Matches are emitted
+# in build sort order within a probe row and probe rows stay in probe
+# order — byte-identical to ``operators.op_hash_join``.
 
 def _int_valued_sim(expr, int_kinds: dict) -> bool:
     """``operators``-free mirror of ``_int_valued`` over a simulated
@@ -352,6 +400,7 @@ class _FusedTail:
         self._wide_consts = _any_wide_int(consts)
         self._seen_probe: set = set()
         self._seen_build: set = set()
+        self._seen_out: set = set()      # expanded-row counts (dup joins)
         self._fns: dict = {}
 
     # -- plan analysis (per input schema) ----------------------------------
@@ -419,12 +468,19 @@ class _FusedTail:
             if lk.dtype.kind not in "iu" or rk.dtype.kind not in "iu":
                 return True
             if _overflows_int32(lk) or _overflows_int32(rk):
+                _warn_int32_fallback("join key values exceed int32 range")
                 return True
         for c in left_in:
             if _overflows_int32(np.asarray(batch[c])):
+                if self.join is not None:
+                    _warn_int32_fallback(
+                        f"probe-side column {c!r} exceeds int32 range")
                 return True
         for c in right_in:
             if _overflows_int32(np.asarray(build[c])):
+                if self.join is not None:
+                    _warn_int32_fallback(
+                        f"build-side column {c!r} exceeds int32 range")
                 return True
         # Derived integer arithmetic would narrow to int32 (mirrors
         # _ProjectStage's guard) — simulate dtype kinds through the ops.
@@ -469,13 +525,42 @@ class _FusedTail:
                                              self.partition[1])
         return batch
 
-    # -- traced function ----------------------------------------------------
-    def _build_fn(self, sources, left_in, right_in, needs_pos):
-        ops = self.ops
-        join = self.join
-        partition = self.partition
-        derived_out = sorted(n for n, s in sources.items()
+    # -- traced functions ---------------------------------------------------
+    def _trace_ops(self, sources, env, match, n):
+        """Shared trace body (pure; called inside jit): fused predicate
+        mask, derived projections, and the partition assignment over an
+        env of traced columns."""
+        for op in self.ops:
+            if op["op"] == "filter":
+                match = match & operators.eval_expr(op["expr"], env,
+                                                    xp=jnp)
+            else:
+                new = dict(env)        # keep shadowed inputs reachable for
+                for c in op["columns"]:            # later env lookups
+                    if not isinstance(c, str):
+                        v = operators.eval_value(c[1], env, xp=jnp)
+                        new[c[0]] = jnp.broadcast_to(v, (n,)) \
+                            if v.ndim == 0 else v
+                env = new
+        if self.partition is not None:
+            key, nparts = self.partition[0], self.partition[1]
+            src = sources[key]
+            if src[0] == "const":
+                kv = int(np.asarray(
+                    operators.eval_value(src[1], ColumnBatch({}))))
+                assign = jnp.where(match, kv % nparts, nparts)
+            else:
+                assign = jnp.where(
+                    match, env[key].astype(jnp.int32) % nparts, nparts)
+        else:
+            assign = jnp.where(match, 0, 1)
+        derived_out = sorted(nm for nm, s in sources.items()
                              if s[0] == "derived")
+        return assign.astype(jnp.int32), {nm: env[nm] for nm in derived_out}
+
+    def _build_fn(self, sources, left_in, right_in, needs_pos):
+        join = self.join
+        trace_ops = self._trace_ops
 
         @functools.partial(jax.jit, static_argnames=("iters", "r"))
         def fn(left_cols, bkeys, bpayload, scalars, starts, n_valid,
@@ -494,35 +579,84 @@ class _FusedTail:
                     env[c] = bpayload[c][pos]
             else:
                 match = valid
-            for op in ops:
-                if op["op"] == "filter":
-                    match = match & operators.eval_expr(op["expr"], env,
-                                                        xp=jnp)
-                else:
-                    new = dict(env)    # keep shadowed inputs reachable for
-                    for c in op["columns"]:            # later env lookups
-                        if not isinstance(c, str):
-                            v = operators.eval_value(c[1], env, xp=jnp)
-                            new[c[0]] = jnp.broadcast_to(v, (n,)) \
-                                if v.ndim == 0 else v
-                    env = new
-            if partition is not None:
-                key, nparts = partition[0], partition[1]
-                src = sources[key]
-                if src[0] == "const":
-                    kv = int(np.asarray(
-                        operators.eval_value(src[1], ColumnBatch({}))))
-                    assign = jnp.where(match, kv % nparts, nparts)
-                else:
-                    assign = jnp.where(
-                        match, env[key].astype(jnp.int32) % nparts, nparts)
-            else:
-                assign = jnp.where(match, 0, 1)
-            out = {name: env[name] for name in derived_out}
-            res = (assign.astype(jnp.int32), out)
+            assign, out = trace_ops(sources, env, match, n)
+            res = (assign, out)
             return res + ((pos,) if needs_pos else ())
 
         return fn
+
+    def _build_count_fn(self):
+        """Dup-key trace 1: range-probe every key, return the lower-bound
+        positions and the per-probe-row match multiplicities."""
+        @functools.partial(jax.jit, static_argnames=("iters",))
+        def count_fn(lkeys, bkeys, scalars, starts, n_valid, *, iters):
+            n = lkeys.shape[0]
+            valid = jnp.arange(n, dtype=jnp.int32) < n_valid
+            lo, hi, match = hj_kernel.sorted_probe_range(
+                bkeys, lkeys.astype(jnp.int32), scalars=scalars,
+                starts=starts, iters=iters, interpret=_interpret())
+            return lo, jnp.where(match & valid, hi - lo, 0)
+
+        return count_fn
+
+    def _build_expand_fn(self, sources, left_in, right_in):
+        """Dup-key trace 2: expand the match multiplicity (output row j
+        belongs to probe row ``i = searchsorted(prefix, j) - 1`` at build
+        position ``lo[i] + (j - prefix[i])``), then run the fused ops and
+        partition assignment over the expanded rows."""
+        trace_ops = self._trace_ops
+
+        @functools.partial(jax.jit, static_argnames=("r", "n_out"))
+        def expand_fn(left_cols, bpayload, lo, prefix, total, *, r, n_out):
+            j = jnp.arange(n_out, dtype=jnp.int32)
+            i = jnp.clip(
+                jnp.searchsorted(prefix, j, side="right").astype(jnp.int32)
+                - 1, 0, lo.shape[0] - 1)
+            valid = j < total
+            rpos = lo[i] + (j - prefix[i])
+            env = {c: left_cols[c][i] for c in left_in}
+            for c in right_in:
+                env[c] = bpayload[c][rpos]
+            assign, out = trace_ops(sources, env, valid, n_out)
+            return assign, out, i, rpos
+
+        return expand_fn
+
+    # -- host finalization --------------------------------------------------
+    @staticmethod
+    def _stable_partition(assign: np.ndarray, r: int):
+        """One radix argsort for the stable partition permutation."""
+        lividx = np.flatnonzero(assign < r)
+        if r == 1:
+            return lividx, np.asarray([len(lividx)])   # already in order
+        order = lividx[np.argsort(assign[lividx], kind="stable")]
+        return order, np.bincount(assign[lividx], minlength=r)
+
+    def _gather_out(self, batch, bpay_out, sources, derived, order,
+                    left_sel, right_sel, nrows):
+        """Exactly one gather per output column — from the ORIGINAL
+        arrays for pass-through columns (dtype preserved), from the
+        trace outputs for derived ones."""
+        out = {}
+        for name, src in sources.items():
+            if src[0] == "left":
+                out[name] = np.asarray(batch[src[1]])[left_sel]
+            elif src[0] == "right":
+                out[name] = bpay_out[src[1]][right_sel]
+            elif src[0] == "derived":
+                out[name] = np.asarray(derived[name])[:nrows][order]
+            else:   # const: numpy dtype semantics (np.full of a scalar)
+                out[name] = np.full(len(order), np.asarray(
+                    operators.eval_value(src[1], ColumnBatch({}))))
+        return out
+
+    def _emit(self, out: dict, counts: np.ndarray, r: int):
+        if self.partition is None:
+            return ColumnBatch(out)
+        bounds = np.concatenate(([0], np.cumsum(counts)))
+        return [ColumnBatch({k: v[bounds[p]:bounds[p + 1]]
+                             for k, v in out.items()})
+                for p in range(r)]
 
     # -- execution ----------------------------------------------------------
     def run(self, batch: ColumnBatch, build):
@@ -548,14 +682,12 @@ class _FusedTail:
         bpay_sorted: dict = {}
         bpay_out: dict = {}
         iters = 0
+        has_dups = False
         if self.join is not None:
             rkeys = np.asarray(build[self.join["right_key"]])
             border = np.argsort(rkeys, kind="stable")
             bs = rkeys[border].astype(np.int32)
-            if bs[1:].size and np.any(bs[1:] == bs[:-1]):
-                # Duplicate build keys: the probe returns one position per
-                # key; the expansion semantics live in op_hash_join.
-                return self._numpy_tail(batch, build)
+            has_dups = bool(bs[1:].size and np.any(bs[1:] == bs[:-1]))
             scalars, starts, iters = hj_kernel.prepare_buckets(bs)
             s = len(bs)
             s_pad = s if s in self._seen_build or \
@@ -583,6 +715,13 @@ class _FusedTail:
         left_cols, _ = _bounded_shape(
             {c: np.asarray(batch[c]) for c in left_in}, n, self._seen_probe)
 
+        if has_dups:
+            return self._run_dup(batch, final_sources, left_in, right_in,
+                                 left_cols, bkeys_pad, bpay_sorted,
+                                 bpay_out, scalars, starts, iters, n, r,
+                                 build, (tuple(left_names),
+                                         tuple(right_names)))
+
         key = (tuple(left_names), tuple(right_names), needs_pos)
         fn = self._fns.get(key)
         if fn is None:
@@ -594,32 +733,59 @@ class _FusedTail:
         derived = {name: v for name, v in res[1].items()}
         pos = np.asarray(res[2])[:n] if needs_pos else None
 
-        # Host: one radix argsort for the stable partition permutation,
-        # then exactly one gather per output column.
-        lividx = np.flatnonzero(assign < r)
-        if r == 1:
-            order = lividx            # single bucket: already in order
-            counts = np.asarray([len(lividx)])
-        else:
-            order = lividx[np.argsort(assign[lividx], kind="stable")]
-            counts = np.bincount(assign[lividx], minlength=r)
-        out = {}
-        for name, src in final_sources.items():
-            if src[0] == "left":
-                out[name] = np.asarray(batch[src[1]])[order]
-            elif src[0] == "right":
-                out[name] = bpay_out[src[1]][pos[order]]
-            elif src[0] == "derived":
-                out[name] = np.asarray(derived[name])[:n][order]
-            else:   # const: numpy dtype semantics (np.full of a scalar)
-                out[name] = np.full(len(order), np.asarray(
-                    operators.eval_value(src[1], ColumnBatch({}))))
-        if self.partition is None:
-            return ColumnBatch(out)
-        bounds = np.concatenate(([0], np.cumsum(counts)))
-        return [ColumnBatch({k: v[bounds[p]:bounds[p + 1]]
-                             for k, v in out.items()})
-                for p in range(r)]
+        order, counts = self._stable_partition(assign, r)
+        out = self._gather_out(batch, bpay_out, final_sources, derived,
+                               order, order,
+                               pos[order] if pos is not None else None, n)
+        return self._emit(out, counts, r)
+
+    def _run_dup(self, batch, sources, left_in, right_in, left_cols,
+                 bkeys_pad, bpay_sorted, bpay_out, scalars, starts, iters,
+                 n, r, build, schema_key):
+        """Compiled duplicate-build-key join: counts/prefix pass, then the
+        in-trace expansion (see the section comment above)."""
+        cf = self._fns.get(("count",))
+        if cf is None:
+            cf = self._build_count_fn()
+            self._fns[("count",)] = cf
+        lo, counts = cf(left_cols[self.join["left_key"]], bkeys_pad,
+                        scalars, starts, np.int32(n), iters=iters)
+        counts = np.asarray(counts)
+        prefix = np.zeros(len(counts) + 1, dtype=np.int64)
+        np.cumsum(counts, dtype=np.int64, out=prefix[1:])
+        total = int(prefix[-1])
+        if total == 0:
+            # Nothing matched: the interpreted tail is O(probe) and keeps
+            # the empty-output schema semantics in one place.
+            return self._numpy_tail(batch, build)
+        if total > _INT32_MAX:
+            _warn_int32_fallback(
+                f"duplicate-key expansion of {total} rows exceeds int32")
+            return self._numpy_tail(batch, build)
+
+        n_out = total
+        if n_out not in self._seen_out and \
+                len(self._seen_out) >= _MAX_RAW_SHAPES:
+            n_out = _pow2(n_out)
+        self._seen_out.add(n_out)
+
+        key = ("expand",) + schema_key
+        ef = self._fns.get(key)
+        if ef is None:
+            ef = self._build_expand_fn(sources, left_in, right_in)
+            self._fns[key] = ef
+        res = ef(left_cols, bpay_sorted, np.asarray(lo),
+                 prefix.astype(np.int32), np.int32(total), r=r,
+                 n_out=n_out)
+        assign = np.asarray(res[0])[:total]
+        derived = {name: v for name, v in res[1].items()}
+        lsel = np.asarray(res[2])[:total]
+        rpos = np.asarray(res[3])[:total]
+
+        order, counts_p = self._stable_partition(assign, r)
+        out = self._gather_out(batch, bpay_out, sources, derived, order,
+                               lsel[order], rpos[order], total)
+        return self._emit(out, counts_p, r)
 
 
 @functools.lru_cache(maxsize=256)
@@ -766,6 +932,19 @@ def run_pipeline_partition(batch: ColumnBatch, ops: list[dict],
     run and the partition assignment compile into one traced call (see
     ``_FusedTail``); the numpy backend is the interpreted reference:
     ``run_pipeline_ops`` + ``operators.radix_partition``.
+
+    A trailing ``hash_agg`` partitioned by one of its own group keys —
+    the optimizer's partial pre-agg shuffle shape — no longer splits the
+    trace: partitioning by a group key commutes with the per-fragment
+    aggregation, so the segment BEFORE the agg fuses with the partition
+    assignment into one traced call and the aggregation runs per
+    partition slice. The stable partition preserves each group's row
+    order, so the per-slice aggregation sees the same values in the
+    same order as aggregating first; the pairwise sum tree's
+    association can still shift with a group's offset inside the kernel
+    block, so float sums may differ from agg-then-partition in the last
+    ulp — well inside the backend's rtol=1e-6 contract, but not
+    bit-identical.
     """
     if backend == "numpy":
         return operators.radix_partition(
@@ -773,6 +952,16 @@ def run_pipeline_partition(batch: ColumnBatch, ops: list[dict],
     if backend != "jit":
         raise ValueError(f"unknown backend {backend!r}")
     t = _fusable_tail_start(ops)
+    if t == len(ops) and ops and ops[-1]["op"] == "hash_agg" \
+            and key_col in ops[-1]["keys"]:
+        s = _fusable_tail_start(ops[:-1])
+        seg = ops[s:-1]
+        if seg:   # something to fuse the assignment into
+            agg = ops[-1]
+            batch = run_pipeline_jit(batch, ops[:s])
+            parts = _run_tail(batch, seg, (key_col, partitions))
+            return [_run_hash_agg(p, agg["keys"], agg["aggs"])
+                    for p in parts]
     batch = run_pipeline_jit(batch, ops[:t])
     if t == len(ops):
         return operators.radix_partition(batch, key_col, partitions)

@@ -6,6 +6,12 @@ via ``core.burst_planner``), schedules pipelines stage-wise through
 ``core.scheduler`` on either the elastic (FaaS) or provisioned (IaaS) pool,
 and returns the result location plus runtime and cost — the same plan runs
 in both modes.
+
+Workers execute fragments on the compiled ``jit`` backend by default (the
+paper's lesson: per-worker execution speed sets the serverless cost
+break-even); pass ``backend="numpy"`` for the interpreted semantic
+reference. ``docs/BACKENDS.md`` documents the float contract and the
+remaining cases where jit itself falls back to numpy.
 """
 from __future__ import annotations
 
@@ -69,7 +75,7 @@ class Coordinator:
                  max_workers: int = 1024,
                  preboot: bool = True,
                  rng_seed: int = 0,
-                 backend: str = "numpy"):
+                 backend: str = "jit"):
         if mode not in ("elastic", "provisioned"):
             raise ValueError(mode)
         if backend not in CPU_BYTES_PER_S_BY_BACKEND:

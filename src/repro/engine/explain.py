@@ -66,7 +66,7 @@ def format_physical(plan: QueryPlan) -> str:
 
 
 def explain(query: LogicalQuery, stats: Optional[optimizer.Stats] = None,
-            backend: str = "numpy") -> str:
+            backend: str = "jit") -> str:
     plan, report = optimizer.lower(query, stats=stats, backend=backend)
     sections = [
         f"query: {query.name} (backend={backend})",
@@ -93,10 +93,11 @@ def main(argv=None) -> int:
     ap.add_argument("query", nargs="?", default="tpch_q12",
                     help="query name (e.g. tpch_q1, tpch_q6, tpch_q12, "
                          "tpcxbb_q3)")
-    ap.add_argument("--backend", default="numpy",
+    ap.add_argument("--backend", default="jit",
                     choices=["numpy", "jit"],
                     help="backend whose measured throughput drives "
-                         "fan-out choices")
+                         "fan-out choices (jit is the engine default; "
+                         "numpy is the interpreted reference)")
     ap.add_argument("--list", action="store_true",
                     help="list available queries")
     args = ap.parse_args(argv)

@@ -156,9 +156,15 @@ def op_hash_agg(batch: ColumnBatch, keys: list[str],
     """Group-by aggregate. aggs: [[out_name, fn, col], ...] with fn in
     sum|count|min|max (avg is composed as sum/count at finalization)."""
     if batch.num_rows == 0:
-        cols = {k: np.asarray([]) for k in keys}
-        for out_name, _, _ in aggs:
-            cols[out_name] = np.asarray([])
+        # Empty aggregates keep the dtypes the non-empty case would
+        # produce (keys from the input schema when it carries one,
+        # int64 counts, float64 reductions) so empty shuffle partitions
+        # concat cleanly with populated ones on both backends.
+        cols = {k: np.asarray(batch[k] if k in batch else [])
+                for k in keys}
+        for out_name, fn, _ in aggs:
+            cols[out_name] = np.asarray(
+                [], dtype=np.int64 if fn == "count" else np.float64)
         return ColumnBatch(cols)
     order, starts, out = group_boundaries(batch, keys)
     for out_name, fn, col in aggs:
@@ -177,8 +183,9 @@ def op_hash_join(left: ColumnBatch, right: ColumnBatch, left_key: str,
     expand: every probe row pairs with every matching build row (matches
     emitted in build sort order, probe rows kept in probe order), the
     standard SQL inner-join multiplicity. The compiled backend mirrors
-    these semantics (it falls back to this implementation when the build
-    side has duplicates)."""
+    these semantics in-trace (counts/prefix expansion in
+    ``compile._FusedTail``) and is parity-tested against this
+    implementation, which remains the semantic reference."""
     if left.num_rows == 0 or right.num_rows == 0:
         cols = {k: np.asarray([]) for k in left}
         cols.update({k: np.asarray([]) for k in right if k != right_key})

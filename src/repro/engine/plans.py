@@ -16,9 +16,12 @@ read into the op spec at runtime (a ``"build"`` ColumnBatch, never part of
 the JSON), and the execution backends treat the join like any other
 pipeline op: the numpy backend interprets ``operators.op_hash_join``
 (duplicate build keys expand, SQL inner-join multiplicity); the jit
-backend traces the join probe, every following filter/project, and — when
-the run reaches a shuffle output — the radix partition assignment as one
-compiled call (``engine_compile._FusedTail``). The legacy ``Pipeline.join``
+backend (the default) traces the join probe — duplicate build keys
+included — every following filter/project, and — when the run reaches a
+shuffle output — the radix partition assignment as one compiled call
+(``engine_compile._FusedTail``); a trailing partial ``hash_agg``
+partitioned by one of its own group keys aggregates per partition slice
+so the segment still traces whole. The legacy ``Pipeline.join``
 field (``{left_key, right_key}``) is still accepted and is normalized by
 the worker into a leading ``hash_join`` op.
 

@@ -2,18 +2,22 @@
 
 A worker parses its fragment spec, reads its input partitions in batches
 from shared storage (with projection pushdown), executes the vectorized
-operator chain (numpy-interpreted or jit-compiled, per the fragment's
-``backend``), partitions its output, and writes it back to storage.
-Workers never talk to each other — all communication is through the object
-store, as serverless functions require.
+operator chain (jit-compiled by default, numpy-interpreted for the
+semantic reference, per the fragment's ``backend``), partitions its
+output, and writes it back to storage. Workers never talk to each other —
+all communication is through the object store, as serverless functions
+require.
 
 The equi-join is a pipeline op (``{"op": "hash_join", ...}``): the worker
 resolves the build-side read into the op spec and hands the whole chain to
-``engine_compile`` — on the jit backend the join probe, the downstream
-operators, and the shuffle's radix partition assignment trace as one
-compiled call (``run_pipeline_partition``); the numpy backend keeps the
-interpreted reference semantics. Legacy ``FragmentSpec.join`` specs are
-normalized into a leading ``hash_join`` op.
+``engine_compile`` — on the jit backend the join probe (duplicate build
+keys included), the downstream operators, and the shuffle's radix
+partition assignment trace as one compiled call
+(``run_pipeline_partition``; a trailing partial ``hash_agg`` partitioned
+by its own group key aggregates per partition slice so the segment still
+traces whole); the numpy backend keeps the interpreted reference
+semantics. Legacy ``FragmentSpec.join`` specs are normalized into a
+leading ``hash_join`` op.
 
 Shuffle hardening: each writer reports the bitmap of partitions it
 actually wrote (``FragmentMetrics.partitions_written``) and records it in
@@ -51,7 +55,7 @@ class FragmentSpec:
     ops: list[dict]
     join: dict | None = None            # legacy: prepended as a hash_join op
     output: dict = dataclasses.field(default_factory=dict)
-    backend: str = "numpy"              # "numpy" | "jit"
+    backend: str = "jit"                # "jit" (default) | "numpy" (reference)
     missing_ok: bool = False            # inputs may be skipped-empty objects
 
 

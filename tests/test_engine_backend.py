@@ -60,9 +60,12 @@ def test_backend_parity(loaded_store, name, plan_fn, key_cols):
     assert a.num_rows == b.num_rows
     ra, rb = _sorted_rows(a, key_cols), _sorted_rows(b, key_cols)
     for col in ra:
+        # The jit float contract: pairwise f32 accumulation keeps
+        # aggregates within rtol=1e-6 of the float64 reference backend
+        # (docs/BACKENDS.md).
         np.testing.assert_allclose(np.asarray(ra[col], np.float64),
                                    np.asarray(rb[col], np.float64),
-                                   rtol=1e-4)
+                                   rtol=1e-6)
 
 
 def test_backend_parity_bb_q3(loaded_store):
@@ -292,7 +295,7 @@ def _join_op(build):
             "right_key": "o_orderkey", "build": build}
 
 
-def _assert_batch_close(a, b, rtol=1e-4):
+def _assert_batch_close(a, b, rtol=1e-6):
     assert list(a) == list(b)
     assert a.num_rows == b.num_rows
     for c in a:
@@ -382,8 +385,9 @@ def test_join_empty_sides(backend):
 
 
 def test_join_duplicate_build_keys_expand():
-    """Satellite bugfix: duplicate build keys must expand (SQL inner-join
-    multiplicity), not silently drop matches — on both backends."""
+    """Duplicate build keys must expand (SQL inner-join multiplicity),
+    not silently drop matches — on both backends. The jit backend now
+    expands them IN-TRACE (counts/prefix pass + compiled expansion)."""
     left = ColumnBatch({"k": np.asarray([1, 2, 3, 1], np.int64),
                         "lv": np.asarray([10.0, 20.0, 30.0, 40.0])})
     build = ColumnBatch({"bk": np.asarray([1, 1, 2, 5], np.int64),
@@ -397,6 +401,260 @@ def test_join_duplicate_build_keys_expand():
             "build": build}]
     jit_out = engine_compile.run_pipeline(left, ops, backend="jit")
     _assert_batch_close(ref, jit_out)
+
+
+# ---------------------------------------------------------------------------
+# Compiled duplicate-key join: parity sweep (the tentpole — no numpy
+# fallback on any of these shapes)
+# ---------------------------------------------------------------------------
+
+def _dup_join_inputs(n=20_000, s=5_000, seed=7, all_dup=False,
+                     skew: int = 4):
+    """Probe/build with duplicate build keys. ``skew`` controls the
+    multiplicity distribution: key ``k`` appears ``1 + (k % skew)`` times
+    on the build side, so multiplicities are skewed, not uniform."""
+    rng = np.random.default_rng(seed)
+    uniq = np.arange(1, s + 1, dtype=np.int64)
+    if all_dup:
+        mult = np.full(s, 3, dtype=np.int64)      # every key duplicated
+    else:
+        mult = 1 + (uniq % skew)                  # skewed 1..skew copies
+    bk = np.repeat(uniq, mult)
+    perm = rng.permutation(len(bk))
+    build = ColumnBatch({
+        "bk": bk[perm],
+        "bv": rng.integers(0, 5, len(bk)).astype(np.int8)[perm],
+        "bw": np.round(rng.uniform(0.0, 1.0, len(bk)), 3)[perm],
+    })
+    left = ColumnBatch({
+        "k": rng.integers(1, int(s * 1.3), n).astype(np.int64),
+        "m": rng.integers(0, 7, n, dtype=np.int8),
+        "p": np.round(rng.uniform(1.0, 100.0, n), 2),
+    })
+    return left, build
+
+
+@pytest.fixture
+def no_numpy_join_fallback(monkeypatch):
+    """Fail the test if the jit path delegates to op_hash_join."""
+    calls = []
+    orig = operators.op_hash_join
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(operators, "op_hash_join", spy)
+    return calls
+
+
+@pytest.mark.parametrize("case", ["skewed", "all_dup", "heavy_skew"])
+def test_dup_join_parity_sweep(case, no_numpy_join_fallback):
+    left, build = _dup_join_inputs(
+        all_dup=(case == "all_dup"),
+        skew=16 if case == "heavy_skew" else 4,
+        seed={"skewed": 7, "all_dup": 8, "heavy_skew": 9}[case])
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build}]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    no_numpy_join_fallback.clear()      # the numpy run legitimately calls it
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    assert not no_numpy_join_fallback, \
+        "duplicate-key join fell back to the interpreted path"
+    _assert_batch_close(a, b)
+    assert a.num_rows > left.num_rows   # multiplicity actually expanded
+    # Expansion order matches op_hash_join exactly (probe order, matches
+    # in build sort order), and pass-through dtypes survive.
+    np.testing.assert_array_equal(np.asarray(a["k"]), np.asarray(b["k"]))
+    np.testing.assert_array_equal(np.asarray(a["bv"]), np.asarray(b["bv"]))
+    assert b["k"].dtype == np.int64 and b["bv"].dtype == np.int8
+
+
+def test_dup_join_downstream_filter_and_partition(no_numpy_join_fallback):
+    """Dup keys + downstream filter + projection + radix partition: the
+    whole tail stays compiled and slices identically to the reference
+    (filters see per-duplicate build values, so this exercises the
+    expanded env, not just the expansion)."""
+    left, build = _dup_join_inputs(seed=10)
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build},
+           {"op": "filter", "expr": ["in", "bv", [1, 3]]},
+           # add1 (not sub1): 1-bw near bw=1 cancels catastrophically in
+           # f32, which is a documented value-level caveat, not a join
+           # defect — keep this test about the dup expansion.
+           {"op": "project", "columns": [
+               "k", "m",
+               ["hv", ["mul", "p", ["add1", "bw"]]]]}]
+    r = 8
+    pa = engine_compile.run_pipeline_partition(left, ops, "k", r,
+                                               backend="numpy")
+    no_numpy_join_fallback.clear()
+    pb = engine_compile.run_pipeline_partition(left, ops, "k", r,
+                                               backend="jit")
+    assert not no_numpy_join_fallback
+    assert len(pa) == len(pb) == r
+    assert sum(p.num_rows for p in pb) > 0
+    for p in range(r):
+        _assert_batch_close(pa[p], pb[p])
+        np.testing.assert_array_equal(np.asarray(pa[p]["k"]),
+                                      np.asarray(pb[p]["k"]))
+
+
+def test_dup_join_no_match_and_empty_edges(no_numpy_join_fallback):
+    """Zero-match dup joins may take any path but must keep the schema
+    and emptiness of the reference."""
+    left = ColumnBatch({"k": np.asarray([100, 200], np.int64)})
+    build = ColumnBatch({"bk": np.asarray([1, 1, 2], np.int64),
+                         "bv": np.asarray([1.0, 2.0, 3.0])})
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build}]
+    a = engine_compile.run_pipeline(left, ops, backend="numpy")
+    b = engine_compile.run_pipeline(left, ops, backend="jit")
+    assert a.num_rows == b.num_rows == 0
+    assert set(a) == set(b) == {"k", "bv"}
+
+
+def test_int32_overflow_fallback_warns_once(monkeypatch):
+    """The int32-overflow join fallback stays, but is loud: exactly one
+    RuntimeWarning per process, however many fragments fall back."""
+    import warnings as warnings_mod
+    monkeypatch.setattr(engine_compile, "_INT32_FALLBACK_WARNED", False)
+    left = ColumnBatch({"k": np.asarray([2**40, 7], np.int64)})
+    build = ColumnBatch({"bk": np.asarray([2**40, 8], np.int64),
+                         "bv": np.asarray([1.0, 2.0])})
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build}]
+    with warnings_mod.catch_warnings(record=True) as rec:
+        warnings_mod.simplefilter("always")
+        engine_compile.run_pipeline(left, ops, backend="jit")
+        engine_compile.run_pipeline(left, ops, backend="jit")
+    hits = [w for w in rec if issubclass(w.category, RuntimeWarning)
+            and "int32" in str(w.message)]
+    assert len(hits) == 1
+
+
+# ---------------------------------------------------------------------------
+# Mid-plan partition fusion: hash_agg between the ops and the shuffle no
+# longer splits the trace (partial pre-agg shuffle plans)
+# ---------------------------------------------------------------------------
+
+def _preagg_batch(n=50_000, seed=12):
+    rng = np.random.default_rng(seed)
+    return ColumnBatch({
+        "g": rng.integers(0, 5, n, dtype=np.int8),
+        "h": rng.integers(0, 3, n, dtype=np.int8),
+        "x": np.round(rng.uniform(900.0, 105000.0, n), 2),
+        "d": np.round(rng.integers(0, 11, n) * 0.01, 2),
+    })
+
+
+_PREAGG_OPS = [
+    {"op": "filter", "expr": ["lt", "d", 0.09]},
+    {"op": "project", "columns": [
+        "g", "h", "x", ["dp", ["mul", "x", ["sub1", "d"]]]]},
+    {"op": "hash_agg", "keys": ["g", "h"],
+     "aggs": [["sx", "sum", "x"], ["sdp", "sum", "dp"],
+              ["c", "count", "x"], ["lo", "min", "x"],
+              ["hi", "max", "x"]]},
+]
+
+
+def test_midplan_agg_partition_fusion_parity():
+    """filter+project+partial-agg -> shuffle runs the segment and the
+    partition assignment as one traced call, aggregating per partition
+    slice — partition contents must match the interpreted reference
+    (agg first, then radix partition) exactly."""
+    batch = _preagg_batch()
+    r = 4
+    pa = engine_compile.run_pipeline_partition(batch, _PREAGG_OPS, "g", r,
+                                               backend="numpy")
+    pb = engine_compile.run_pipeline_partition(batch, _PREAGG_OPS, "g", r,
+                                               backend="jit")
+    assert len(pa) == len(pb) == r
+    assert sum(p.num_rows for p in pb) == sum(p.num_rows for p in pa) > 0
+    for p in range(r):
+        _assert_batch_close(pa[p], pb[p])
+        # Group rows arrive in the same (lexsorted) order per partition.
+        np.testing.assert_array_equal(np.asarray(pa[p]["g"]),
+                                      np.asarray(pb[p]["g"]))
+        np.testing.assert_array_equal(np.asarray(pa[p]["h"]),
+                                      np.asarray(pb[p]["h"]))
+
+
+def test_midplan_fusion_empty_partitions_keep_dtypes():
+    """More partitions than distinct group-key values: the fused path's
+    empty partitions must carry the same dtypes as the populated ones
+    (and as the numpy reference), or a consumer concat promotes the
+    whole key/count column to float64."""
+    batch = _preagg_batch(n=5_000, seed=15)
+    r = 16                              # g has 5 distinct values
+    pa = engine_compile.run_pipeline_partition(batch, _PREAGG_OPS, "g", r,
+                                               backend="numpy")
+    pb = engine_compile.run_pipeline_partition(batch, _PREAGG_OPS, "g", r,
+                                               backend="jit")
+    assert any(p.num_rows == 0 for p in pb)
+    for p in range(r):
+        for col in pa[p]:
+            assert pb[p][col].dtype == pa[p][col].dtype, \
+                (p, col, pb[p][col].dtype, pa[p][col].dtype)
+    # Concat across partitions (what a shuffle consumer does) keeps the
+    # key and count dtypes integral.
+    merged = ColumnBatch.concat(pb)
+    assert merged["g"].dtype == np.int8
+    assert merged["c"].dtype == np.int64
+
+
+def test_midplan_join_agg_partition_fusion_parity(no_numpy_join_fallback):
+    """Q12's join_agg shape — [hash_join, project, hash_agg] -> shuffle —
+    fuses join + ops + partition assignment in one trace with dup build
+    keys, then aggregates per slice."""
+    left, build = _dup_join_inputs(seed=13)
+    ops = [{"op": "hash_join", "left_key": "k", "right_key": "bk",
+            "build": build},
+           {"op": "project", "columns": [
+               "m", ["hl", ["case_in", "bv", [0, 1]]]]},
+           {"op": "hash_agg", "keys": ["m"],
+            "aggs": [["s", "sum", "hl"], ["c", "count", "hl"]]}]
+    r = 4
+    pa = engine_compile.run_pipeline_partition(left, ops, "m", r,
+                                               backend="numpy")
+    no_numpy_join_fallback.clear()
+    pb = engine_compile.run_pipeline_partition(left, ops, "m", r,
+                                               backend="jit")
+    assert not no_numpy_join_fallback
+    for p in range(r):
+        _assert_batch_close(pa[p], pb[p])
+
+
+def test_midplan_fusion_guard_non_group_partition_key():
+    """Partitioning by a column that is NOT one of the agg's group keys
+    cannot commute below the agg — the guarded path must still match."""
+    batch = _preagg_batch(n=10_000, seed=14)
+    ops = [
+        {"op": "project", "columns": ["g", "h", "x"]},
+        {"op": "hash_agg", "keys": ["g", "h"],
+         "aggs": [["sx", "sum", "x"]]},
+        # Re-project so the partition key is a derived (non-group) col.
+    ]
+    r = 3
+    # Partition by "h" (a group key: fused path) and compare against the
+    # same plan partitioned by a key the guard must reject is impossible
+    # to author here, so exercise the guard with a global aggregate whose
+    # partition key is an aggregate output.
+    glob = [{"op": "hash_agg", "keys": [],
+             "aggs": [["sx", "sum", "x"], ["c", "count", "x"]]}]
+    pa = engine_compile.run_pipeline_partition(batch, glob, "sx", 1,
+                                               backend="numpy")
+    pb = engine_compile.run_pipeline_partition(batch, glob, "sx", 1,
+                                               backend="jit")
+    assert len(pa) == len(pb) == 1
+    _assert_batch_close(pa[0], pb[0])
+    pa = engine_compile.run_pipeline_partition(batch, ops, "h", r,
+                                               backend="numpy")
+    pb = engine_compile.run_pipeline_partition(batch, ops, "h", r,
+                                               backend="jit")
+    for p in range(r):
+        _assert_batch_close(pa[p], pb[p])
 
 
 def test_join_full_int32_span_build_keys():
@@ -442,7 +700,7 @@ def test_q12_join_as_op_plan_shape():
 
 
 def test_q12_end_to_end_parity(loaded_store):
-    """Q12 returns identical results across backends (rtol 1e-4) with the
+    """Q12 returns identical results across backends (rtol 1e-6) with the
     join running as a fused pipeline op."""
     store, keys = loaded_store
     res = {b: _run(store, keys, b, queries.q12_plan, "q12-e2e")
@@ -453,7 +711,7 @@ def test_q12_end_to_end_parity(loaded_store):
     for col in ra:
         np.testing.assert_allclose(np.asarray(ra[col], np.float64),
                                    np.asarray(rb[col], np.float64),
-                                   rtol=1e-4)
+                                   rtol=1e-6)
 
 
 def test_legacy_fragmentspec_join_still_supported():

@@ -1,5 +1,11 @@
 """Query engine end-to-end: results match pure-numpy references in both
-deployment modes; stage scheduling, cost accounting, burst-aware planning."""
+deployment modes; stage scheduling, cost accounting, burst-aware planning.
+
+The coordinator runs the compiled jit backend by default, whose float
+contract is aggregate parity at rtol=1e-6 against float64 (pairwise f32
+accumulation; see docs/BACKENDS.md) — float comparisons here use that
+tolerance. ``test_numpy_reference_backend_exact`` keeps the rel=1e-9
+check alive on the explicit numpy semantic-reference backend."""
 import numpy as np
 import pytest
 
@@ -41,7 +47,7 @@ def test_q6(coordinator, loaded_store):
     res = coordinator.execute(queries.q6_plan(),
                               query_id=f"q6-{coordinator.mode}-t")
     ref = queries.q6_reference(_full(store, keys["lineitem"]))
-    assert float(res.result["revenue"][0]) == pytest.approx(ref, rel=1e-9)
+    assert float(res.result["revenue"][0]) == pytest.approx(ref, rel=1e-6)
     assert res.runtime_s > 0
     assert res.faas_cost_usd > 0
 
@@ -60,7 +66,7 @@ def test_q1(coordinator, loaded_store):
                       ref["sum_charge"].tolist()))
     for g, w in zip(got, want):
         assert g[:2] == w[:2]
-        assert g[2] == pytest.approx(w[2], rel=1e-9)
+        assert g[2] == pytest.approx(w[2], rel=1e-6)
 
 
 def test_q12(coordinator, loaded_store):
@@ -101,6 +107,29 @@ def test_plan_json_roundtrip():
     assert [p.name for p in back.pipelines] == \
         [p.name for p in plan.pipelines]
     assert back.pipelines[2].join == plan.pipelines[2].join
+
+
+def test_numpy_reference_backend_exact(loaded_store):
+    """The demoted numpy backend stays the float64 semantic reference:
+    exact (rel=1e-9) agreement with the pure-numpy query references."""
+    store, keys = loaded_store
+    c = Coordinator(store, mode="elastic", backend="numpy")
+    for t in ("lineitem", "orders"):
+        c.register_table(t, keys[t])
+    res = c.execute(queries.q6_plan(), query_id="q6-npref")
+    ref = queries.q6_reference(_full(store, keys["lineitem"]))
+    assert float(res.result["revenue"][0]) == pytest.approx(ref, rel=1e-9)
+    res1 = c.execute(queries.q1_plan(), query_id="q1-npref")
+    ref1 = queries.q1_reference(_full(store, keys["lineitem"]))
+    got = sorted(zip(res1.result["l_returnflag"].tolist(),
+                     res1.result["l_linestatus"].tolist(),
+                     res1.result["sum_charge"].tolist()))
+    want = sorted(zip(ref1["l_returnflag"].tolist(),
+                      ref1["l_linestatus"].tolist(),
+                      ref1["sum_charge"].tolist()))
+    for g, w in zip(got, want):
+        assert g[:2] == w[:2]
+        assert g[2] == pytest.approx(w[2], rel=1e-9)
 
 
 def test_faas_vs_iaas_same_result(loaded_store):

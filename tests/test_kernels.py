@@ -218,7 +218,8 @@ def test_blocked_sdpa_matches_reference(rng, causal, window):
 # -- sorted-probe (hash join) -------------------------------------------------
 
 from repro.kernels.hash_join import (prepare_buckets, sorted_probe,
-                                     sorted_probe_np)
+                                     sorted_probe_np, sorted_probe_range,
+                                     sorted_probe_range_np)
 
 
 @pytest.mark.parametrize("n,s,lo,hi", [
@@ -248,6 +249,28 @@ def test_sorted_probe_duplicate_build_keys_lower_bound(rng):
     np.testing.assert_array_equal(np.asarray(match), ref_match)
     np.testing.assert_array_equal(np.asarray(pos)[ref_match],
                                   ref_pos[ref_match])
+
+
+@pytest.mark.parametrize("n,s,kmax,dup_frac", [
+    (2000, 400, 600, 0.5),            # half the keys duplicated
+    (500, 300, 50, 1.0),              # every build key duplicated, dense
+    (257, 4096, 2**30, 0.1),          # sparse wide span, light dups
+])
+def test_sorted_probe_range_matches_oracle(rng, n, s, kmax, dup_frac):
+    """The duplicate-key range probe: matched keys report the exact
+    [lo, hi) run; absent keys report multiplicity 0 (their lo/hi are
+    bucket-local and intentionally unspecified beyond hi - lo == 0)."""
+    base = rng.integers(0, kmax, s).astype(np.int32)
+    dups = rng.choice(base, int(s * dup_frac))
+    build = np.sort(np.concatenate([base, dups])).astype(np.int32)
+    keys = rng.integers(-10, kmax + 10, n).astype(np.int32)
+    lo, hi, match = sorted_probe_range(build, keys, interpret=True)
+    lo, hi, match = np.asarray(lo), np.asarray(hi), np.asarray(match)
+    ref_lo, ref_hi, ref_match = sorted_probe_range_np(build, keys)
+    np.testing.assert_array_equal(match, ref_match)
+    np.testing.assert_array_equal(lo[ref_match], ref_lo[ref_match])
+    np.testing.assert_array_equal(hi[ref_match], ref_hi[ref_match])
+    assert np.all((hi - lo)[~ref_match] == 0)
 
 
 def test_prepare_buckets_depth_covers_skew(rng):
