@@ -16,6 +16,11 @@ every probe key is located with a bucket-accelerated lower-bound search:
   match flag. The caller gathers payload columns with the positions —
   either inside the same ``jax.jit`` trace (derived columns) or in numpy
   (pass-through columns keep their original dtype).
+* ``sorted_probe_range`` is the duplicate-key variant: two bucketed
+  searches (lower bound and upper bound) emit the full ``[lo, hi)`` run
+  of matching build positions, whose length is the match multiplicity.
+  The compiled join's counts/prefix-sum expansion is built on it
+  (``engine.compile._FusedTail``).
 
 Like the other kernels in this package, interpret mode gives bit-accurate
 execution on CPU; the body is plain vector compute plus gathers, which
@@ -141,6 +146,104 @@ def _sorted_probe_call(scalars, starts, build_sorted, keys, *, iters: int,
     )(scalars[None, :], starts[None, :], build_sorted[None, :],
       keys[None, :])
     return pos[0], match[0]
+
+
+def _probe_range_kernel(scal_ref, starts_ref, build_ref, keys_ref,
+                        lo_ref, hi_ref, match_ref, *, iters: int):
+    """Like ``_probe_kernel`` but emits the full duplicate range: per
+    probe key, the lower bound ``lo`` and upper bound ``hi`` into the
+    sorted build side (``hi - lo`` = match multiplicity). Two static-depth
+    binary searches share the bucket narrowing; the upper bound uses a
+    ``<=`` comparator (first position strictly greater than the key)."""
+    bias, shift = scal_ref[0, 0], scal_ref[0, 1]
+    starts = starts_ref[0]
+    build = build_ref[0]
+    keys = keys_ref[0]
+    s_pad = build.shape[0]
+    diff = (keys - bias).astype(jnp.uint32)   # see _probe_kernel: wrap-safe
+    bucket = jnp.minimum(diff >> shift.astype(jnp.uint32),
+                         jnp.uint32(NB - 1)).astype(jnp.int32)
+    b_lo = starts[bucket]
+    b_hi = starts[bucket + 1]
+    lo, hi = b_lo, b_hi
+    for _ in range(iters):            # lower bound: first pos not < key
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        go = (build[jnp.minimum(mid, s_pad - 1)] < keys) & active
+        lo = jnp.where(go, mid + 1, lo)
+        hi = jnp.where(active & ~go, mid, hi)
+    ulo, uhi = b_lo, b_hi
+    for _ in range(iters):            # upper bound: first pos > key
+        active = ulo < uhi
+        mid = (ulo + uhi) >> 1
+        go = (build[jnp.minimum(mid, s_pad - 1)] <= keys) & active
+        ulo = jnp.where(go, mid + 1, ulo)
+        uhi = jnp.where(active & ~go, mid, uhi)
+    s = starts[NB]                    # true (unpadded) build length
+    pos = jnp.minimum(lo, s_pad - 1)
+    lo_ref[0] = lo
+    hi_ref[0] = ulo
+    match_ref[0] = (build[pos] == keys) & (lo < s)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def _sorted_probe_range_call(scalars, starts, build_sorted, keys, *,
+                             iters: int, interpret: bool):
+    s_pad = build_sorted.shape[0]
+    n = keys.shape[0]
+    lo, hi, match = pl.pallas_call(
+        functools.partial(_probe_range_kernel, iters=iters),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, NB + 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.bool_),
+        ],
+        compiler_params=_tpu_params(("arbitrary",)),
+        interpret=interpret,
+    )(scalars[None, :], starts[None, :], build_sorted[None, :],
+      keys[None, :])
+    return lo[0], hi[0], match[0]
+
+
+def sorted_probe_range(build_sorted, keys, *, scalars=None, starts=None,
+                       iters: int | None = None, interpret: bool = False):
+    """Range probe of ``keys`` (n,) into sorted ``build_sorted`` (s,).
+
+    Returns ``(lo, hi, match)``: ``[lo[i], hi[i])`` is the contiguous run
+    of build positions whose key equals ``keys[i]`` (``hi - lo`` is the
+    duplicate multiplicity, 0 when absent) and ``match[i]`` whether the
+    key exists. Backs the compiled duplicate-key join expansion; see
+    ``sorted_probe`` for the int32 contract and bucket-structure reuse.
+    """
+    build_sorted = np.asarray(build_sorted) if scalars is None else \
+        build_sorted
+    if scalars is None:
+        scalars, starts, iters = prepare_buckets(build_sorted)
+    return _sorted_probe_range_call(jnp.asarray(scalars, jnp.int32),
+                                    jnp.asarray(starts, jnp.int32),
+                                    jnp.asarray(build_sorted, jnp.int32),
+                                    jnp.asarray(keys, jnp.int32),
+                                    iters=iters, interpret=interpret)
+
+
+def sorted_probe_range_np(build_sorted: np.ndarray, keys: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pure-numpy oracle for ``sorted_probe_range``."""
+    lo = np.searchsorted(build_sorted, keys, side="left")
+    hi = np.searchsorted(build_sorted, keys, side="right")
+    return lo.astype(np.int32), hi.astype(np.int32), hi > lo
 
 
 def sorted_probe(build_sorted, keys, *, scalars=None, starts=None,
