@@ -50,6 +50,32 @@ def main() -> None:
             print(f"  shipmode={int(res.result['l_shipmode'][i])} "
                   f"revenue={float(res.result['revenue'][i]):,.2f}")
 
+    # Shuffle elision: store the table HASH-partitioned and declare the
+    # layout on the scan — a query keyed on the partition key then needs
+    # no shuffle at all (the combine collapses into the scan fragments;
+    # watch for "shuffle_elision: ... ELIDED" in the applied rules and a
+    # plan with zero shuffle outputs).
+    hkeys = datagen.load_table_hash_partitioned(
+        store, "lineitem", rows=50_000, partition_key="l_orderkey",
+        fanout=8, prefix="hashed")
+    per_order = (
+        scan("lineitem", ["l_orderkey", "l_extendedprice", "l_discount"],
+             partitioned_by=("l_orderkey", 8))
+        .select("l_orderkey",
+                (col("l_extendedprice") * (1 - col("l_discount")))
+                .alias("disc_price"))
+        .group_by("l_orderkey")
+        .agg(sum_("disc_price").alias("revenue"))
+        .collect("revenue_by_order"))
+    print()
+    print(explain.explain(per_order))
+    coord = Coordinator(store, mode="elastic")
+    coord.register_table("lineitem", hkeys)
+    res = coord.run(per_order, query_id="quickstart-elided")
+    print(f"[elided] {res.result.num_rows} orders, "
+          f"runtime={res.runtime_s:.3f}s, shuffle objects written: "
+          f"{len(store.list('shuffle/quickstart-elided/'))}")
+
 
 if __name__ == "__main__":
     main()

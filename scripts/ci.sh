@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# One-command PR gate: tier-1 tests + the benchmark regression gate.
+#
+#   scripts/ci.sh            # gate the committed BENCH_engine.json
+#   scripts/ci.sh --run      # re-run benchmarks first (slow), then gate
+#
+# The regression gate requires the sections PR acceptance depends on to
+# exist and record speedups (a refactor cannot silently drop one), every
+# recorded speedup to stay >= 1.0 and within tolerance of the committed
+# baseline, and planning overhead < 1% of a Q12 run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle"
+python -m benchmarks.check_regression \
+    --require-section "$REQUIRED_SECTIONS" "$@"
+
+echo "ci.sh: all gates green"

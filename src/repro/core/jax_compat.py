@@ -1,0 +1,30 @@
+"""Compatibility shims for jax APIs that moved between pinned versions.
+
+The MoE expert-parallel and gradient-compression paths were written
+against the top-level ``jax.shard_map`` alias; the pinned jax only ships
+``jax.experimental.shard_map.shard_map`` (and renamed the replication
+check kwarg ``check_vma`` -> ``check_rep`` between the two locations).
+Resolving the location once here keeps every call site identical across
+pins.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                     # newer jax: top level
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                             # pinned jax: experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_replication: bool = True):
+    """``jax.shard_map`` regardless of where the pinned jax puts it.
+
+    ``check_replication=False`` maps onto whichever of ``check_vma`` /
+    ``check_rep`` the resolved implementation takes.
+    """
+    kwargs = {} if check_replication else {_CHECK_KW: False}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

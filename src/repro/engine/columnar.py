@@ -155,6 +155,36 @@ def deserialize_frame(data: bytes,
     return ColumnBatch(out)
 
 
+def schema_widths(data: bytes) -> dict[str, int]:
+    """Per-column dtype widths (bytes/value) of a serialized object,
+    WITHOUT decoding any column data. Frames read the JSON header only;
+    npz objects read each member's .npy header (the first block of the
+    zip entry) — the planner uses this to scale size estimates by real
+    column widths instead of a flat column count."""
+    if data[:4] == FRAME_MAGIC:
+        _, header_len = struct.unpack_from("<BI", data, 4)
+        header = json.loads(data[9:4 + 5 + header_len])
+        return {name: np.dtype(dtype_str).itemsize
+                for name, dtype_str, *_ in header["cols"]}
+    import zipfile
+    header_readers = {(1, 0): np.lib.format.read_array_header_1_0,
+                      (2, 0): np.lib.format.read_array_header_2_0}
+    out: dict[str, int] = {}
+    with zipfile.ZipFile(io.BytesIO(data)) as zf:
+        for info in zf.infolist():
+            name = info.filename
+            if not name.endswith(".npy"):
+                continue
+            with zf.open(info) as f:
+                version = np.lib.format.read_magic(f)
+                reader = header_readers.get(version)
+                if reader is None:   # unknown .npy format revision
+                    continue
+                _shape, _fortran, dtype = reader(f)
+            out[name[:-4]] = dtype.itemsize
+    return out
+
+
 def deserialize(data: bytes, columns: Optional[Iterable[str]] = None
                 ) -> ColumnBatch:
     """Projection pushdown: only requested columns are materialized.

@@ -981,3 +981,36 @@ def run_pipeline(batch: ColumnBatch, ops: list[dict],
     except KeyError:
         raise ValueError(f"unknown backend {backend!r}") from None
     return fn(batch, ops)
+
+
+def run_pipeline_collect(batch: ColumnBatch, ops: list[dict],
+                         backend: str = "numpy") -> ColumnBatch:
+    """Execute a COLLECT fragment's pipeline spec.
+
+    Same results as ``run_pipeline``, but on the jit backend a trailing
+    keyed ``hash_agg`` — the optimizer's collapsed partial+final
+    aggregate after a combine-shuffle elision — fuses with its preceding
+    ``[hash_join?] + (filter|project)*`` segment through the
+    ``_FusedTail`` machinery at a single partition: the join probe, the
+    fused predicate mask, the derived projections and the live-row
+    compaction run as ONE traced call (exactly like the shuffle
+    fragment's partition fusion, with r=1), then the aggregation runs
+    over the compacted slice. Integer group keys only; other shapes fall
+    through to the plain drivers unchanged.
+    """
+    if backend == "jit" and ops and ops[-1]["op"] == "hash_agg" \
+            and ops[-1]["keys"]:
+        agg = ops[-1]
+        s = _fusable_tail_start(ops[:-1])
+        seg = ops[s:-1]
+        key0 = agg["keys"][0]
+        # Only take the fused path when the partition key will trace as
+        # an integer — a float group key would push the WHOLE segment
+        # onto the interpreted fallback inside _FusedTail.
+        key_is_int = key0 not in batch \
+            or np.asarray(batch[key0]).dtype.kind in "iu"
+        if seg and key_is_int:
+            head = run_pipeline_jit(batch, ops[:s])
+            parts = _run_tail(head, seg, (key0, 1))
+            return _run_hash_agg(parts[0], agg["keys"], agg["aggs"])
+    return run_pipeline(batch, ops, backend=backend)

@@ -171,12 +171,22 @@ class Coordinator:
             for i in range(n_frags):
                 spec = self._fragment_spec(plan, pipe, query_id, i,
                                            assignments, frag_counts)
-                est, in_bytes = self._estimate(spec)
-                fragments.append(Fragment(
-                    fragment_id=i,
-                    work=lambda s=spec: worker.execute_fragment(
-                        self.store, s, registry=registry),
-                    est_duration_s=est, input_bytes=in_bytes))
+                frag = Fragment(fragment_id=i, work=None)
+
+                def work(s=spec, f=frag):
+                    # Estimate at execution time, not compile time:
+                    # shuffle intermediates do not exist when the plan
+                    # compiles, but by a stage's start its producers
+                    # have written, so the scheduler (which reads the
+                    # estimate after running the work) models
+                    # shuffle-heavy stages on the bytes they REALLY
+                    # move.
+                    f.est_duration_s, f.input_bytes = self._estimate(s)
+                    return worker.execute_fragment(self.store, s,
+                                                   registry=registry)
+
+                frag.work = work
+                fragments.append(frag)
             stages.append(Stage(pipe.name, fragments, deps=pipe.deps()))
         return stages, frag_counts
 
@@ -184,6 +194,16 @@ class Coordinator:
                      query_id: str) -> tuple[int, list[list[str]]]:
         if isinstance(pipe.input, TableInput):
             keys = self.table_keys[pipe.input.table]
+            if pipe.partitioning is not None \
+                    and len(keys) != pipe.partitioning["fanout"]:
+                # A declared pre-partitioned layout the planner relied on:
+                # stored partition i must BE fragment i, which needs
+                # exactly fanout objects registered for the table.
+                raise ValueError(
+                    f"pipeline {pipe.name!r} relies on table "
+                    f"{pipe.input.table!r} being stored as "
+                    f"{pipe.partitioning['fanout']} hash partitions, but "
+                    f"{len(keys)} objects are registered")
             part_bytes = float(np.mean([self.store.size(k) for k in keys])) \
                 if keys else 1.0
             if pipe.fragments:
@@ -219,7 +239,23 @@ class Coordinator:
             columns = None
             missing_ok = True   # writers skip empty shuffle partitions
         read_keys2: list[str] = []
-        if pipe.input2 is not None:
+        columns2 = None
+        missing_ok2 = True
+        if isinstance(pipe.input2, TableInput):
+            # Declared hash-partitioned build table: fragment i reads the
+            # table's stored partition object i directly — no shuffle
+            # objects exist for this side.
+            keys2 = self.table_keys[pipe.input2.table]
+            n_frags = frag_counts[pipe.name]
+            if len(keys2) != n_frags:
+                raise ValueError(
+                    f"pipeline {pipe.name!r} reads build table "
+                    f"{pipe.input2.table!r} as {n_frags} direct partition "
+                    f"slices, but {len(keys2)} objects are registered")
+            read_keys2 = [keys2[i]]
+            columns2 = pipe.input2.columns
+            missing_ok2 = False
+        elif pipe.input2 is not None:
             src2 = pipe.input2.from_pipeline
             read_keys2 = [worker.shuffle_key(query_id, src2, w, i)
                           for w in range(frag_counts[src2])]
@@ -234,7 +270,10 @@ class Coordinator:
             query_id=query_id, pipeline=pipe.name, fragment=i,
             read_keys=read_keys, read_keys2=read_keys2, columns=columns,
             ops=pipe.ops, join=pipe.join, output=output,
-            backend=self.backend, missing_ok=missing_ok)
+            backend=self.backend, missing_ok=missing_ok,
+            partitioning=pipe.partitioning,
+            partitioning2=pipe.partitioning2, columns2=columns2,
+            missing_ok2=missing_ok2)
 
     def _estimate(self, spec: worker.FragmentSpec) -> tuple[float, float]:
         """Model-time duration of a fragment: burst-limited network transfer

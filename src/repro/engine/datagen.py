@@ -105,3 +105,22 @@ def load_table(store: ObjectStore, name: str, rows: int, partitions: int,
         store.put(key, columnar.serialize(part))
         keys.append(key)
     return keys
+
+
+def load_table_hash_partitioned(store: ObjectStore, name: str, rows: int,
+                                partition_key: str, fanout: int,
+                                seed: int = 0,
+                                prefix: str = "tables") -> list[str]:
+    """Generate a table stored HASH-partitioned: object i holds exactly
+    the rows with ``partition_key % fanout == i`` — the layout
+    ``logical.scan(..., partitioned_by=(key, fanout))`` declares, which
+    lets the optimizer elide co-partition and combine shuffles on that
+    key entirely."""
+    from repro.engine.operators import radix_partition
+    batch = TABLES[name](rows, seed=seed)
+    keys = []
+    for p, part in enumerate(radix_partition(batch, partition_key, fanout)):
+        key = f"{prefix}/{name}/hashpart-{p:05d}"
+        store.put(key, columnar.serialize(part))
+        keys.append(key)
+    return keys

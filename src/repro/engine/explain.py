@@ -54,6 +54,11 @@ def _fmt_op(op: dict) -> str:
 def format_pipeline(pipe: Pipeline) -> str:
     lines = [f"{pipe.name}: {_fmt_input(pipe.input)} "
              f"-> {_fmt_output(pipe.output)}"]
+    if pipe.partitioning is not None:
+        lines.append(f"  input partitioning: "
+                     f"hash({pipe.partitioning['key']}) % "
+                     f"{pipe.partitioning['fanout']} "
+                     f"(relied on: shuffle elided)")
     if pipe.input2 is not None:
         lines.append(f"  build side: {_fmt_input(pipe.input2)}")
     for op in pipe.ops:

@@ -292,6 +292,13 @@ def max_(column) -> Agg:
 class Scan:
     table: str
     columns: Optional[list[str]] = None     # None: inferred by pruning
+    # Declared storage layout: stored partition i holds exactly the rows
+    # with ``key % fanout == i`` (``(key, fanout)``). The optimizer's
+    # partitioning-property pass treats such a scan like a shuffle output
+    # — joins and aggregates keyed on ``key`` can elide their row/combine
+    # shuffles entirely — and the worker verifies the declaration against
+    # the actual key values at runtime before relying on it.
+    partitioned_by: Optional[tuple[str, int]] = None
 
 
 @dataclasses.dataclass
@@ -518,13 +525,25 @@ class GroupedPlan:
         return LogicalPlan(Aggregate(self.node, list(self.keys), specs))
 
 
-def scan(table: str, columns: Optional[list[str]] = None) -> LogicalPlan:
+def scan(table: str, columns: Optional[list[str]] = None,
+         partitioned_by: Optional[tuple[str, int]] = None) -> LogicalPlan:
     """Start a plan from a base table. ``columns`` may be omitted: the
     optimizer's projection pruning infers the referenced set (a bare scan
     feeding a UDF without ``output_columns`` still needs them spelled
-    out)."""
+    out). ``partitioned_by=(key, fanout)`` declares that the stored
+    partition objects are hash-partitioned by ``key`` (see
+    ``Scan.partitioned_by``) so downstream shuffles on that key can be
+    elided."""
+    if partitioned_by is not None:
+        key, fanout = partitioned_by
+        if not isinstance(key, str) or int(fanout) < 1:
+            raise LogicalError(
+                f"partitioned_by takes (column, fanout>=1), got "
+                f"{partitioned_by!r}")
+        partitioned_by = (key, int(fanout))
     return LogicalPlan(Scan(table,
-                            list(columns) if columns is not None else None))
+                            list(columns) if columns is not None else None,
+                            partitioned_by=partitioned_by))
 
 
 # ---------------------------------------------------------------------------
@@ -535,7 +554,11 @@ def format_node(node, indent: int = 0) -> str:
     pad = "  " * indent
     if isinstance(node, Scan):
         cols = f" {node.columns}" if node.columns is not None else " [*]"
-        return f"{pad}Scan[{node.table}]{cols}"
+        part = ""
+        if node.partitioned_by is not None:
+            part = (f" partitioned hash({node.partitioned_by[0]}) % "
+                    f"{node.partitioned_by[1]}")
+        return f"{pad}Scan[{node.table}]{cols}{part}"
     if isinstance(node, Filter):
         return (f"{pad}Filter[{node.predicate!r}]\n"
                 + format_node(node.child, indent + 1))

@@ -17,7 +17,36 @@ Rule-based passes over ``engine.logical`` trees, in order:
    ``__zero__`` single-partition shuffle idiom: the combine shuffle
    partitions by the first group key (or the first aggregate output for
    global aggregates — any column works at fan-out 1).
-4. **Physical choices** — the join build side is the smaller estimated
+4. **Partitioning properties & shuffle elision** — every pipeline under
+   construction carries an output-partitioning property
+   (``hash(key) % fanout``, i.e. fragment i holds exactly the rows with
+   ``key % fanout == i``). The property is established by a
+   ``ShuffleOutput`` (the consumer's fragments align with the radix
+   partition), by a ``Scan`` whose table declares
+   ``partitioned_by=(key, fanout)``, and it propagates through filters,
+   projections (rename-aware) and joins (probe rows never move). Two
+   elision rules consume it:
+
+   * *combine elision* — an aggregate whose producing pipeline is
+     already partitioned by one of its group keys (or lives in a single
+     fragment) collapses the partial/final split into ONE fragment-local
+     aggregation: group-key classes are fragment-disjoint, so no combine
+     shuffle (write + read + final fragments) is needed at all.
+   * *co-partition join elision* — a join side already partitioned by
+     its join key at fan-out n continues in place as the probe (no row
+     shuffle); the other side shuffles at the SAME fan-out (forced, hint
+     ignored), or, when it is itself an already-co-partitioned
+     pass-through, its producer's partition slices are read directly as
+     the build input with no rewrite.
+
+   Elided pipelines record the property they relied on in
+   ``Pipeline.partitioning`` (checked by ``QueryPlan.validate()`` and
+   re-verified against actual key values by the worker). The rule always
+   emits a trace line — ``shuffle_elision: ... elided`` or
+   ``shuffle_elision: ... kept (reason)`` — so ``explain`` shows it
+   firing even when it changes nothing.
+
+5. **Physical choices** — the join build side is the smaller estimated
    input (probe keeps its storage order and the build side is the one
    held in memory); shuffle fan-out is chosen so one partition is about
    ``TARGET_PARTITION_SECONDS`` of work at the measured
@@ -28,13 +57,19 @@ Rule-based passes over ``engine.logical`` trees, in order:
    optimizer-owned — the partial agg already shrank the data, so the
    combine follows its own (small) estimate, and a global aggregate's
    combine is always 1 partition (its partition key is a partial value,
-   not a grouping key).
+   not a grouping key). Size estimates are column-width aware when
+   ``Stats`` carries per-column dtype widths (``Stats.from_store`` peeks
+   them from object headers): scans count only the bytes of the columns
+   they read and projections scale by dtype width, so narrow-int tables
+   stop being over-estimated in build-side and fan-out choices.
 
 The emitted ``plans.QueryPlan`` uses only today's physical vocabulary, so
 the numpy and jit backends (including the fused join->ops->partition
 trace) run lowered plans unchanged. ``lower`` returns the plan plus a
 ``PlanReport`` recording every applied rule (rendered by
-``engine.explain``).
+``engine.explain``); ``lower(..., shuffle_elision=False)`` disables the
+elision rules (parity tests and the ``shuffle_elision`` benchmark lower
+both variants from one logical query).
 """
 from __future__ import annotations
 
@@ -61,25 +96,51 @@ DEFAULT_SHUFFLE_PARTITIONS = 8      # no stats, no hint
 FILTER_SELECTIVITY = 0.2            # default per-filter row survival
 AGG_OUTPUT_FRACTION = 0.05          # partial-agg output / input estimate
 AGG_EST_OUTPUT_BYTES = 1.0 * MIB    # fallback when the input is unsized
+# Join elision forces the build side to the probe's existing fan-out; if
+# that leaves per-fragment build slices beyond this multiple of the
+# target partition size, the forced co-partitioning is too coarse and
+# the size-based (unelided) plan wins.
+ELIDE_BUILD_SLICE_FACTOR = 4.0
 
 
 @dataclasses.dataclass
 class Stats:
-    """Planner-visible table statistics (bytes on the object store)."""
+    """Planner-visible table statistics: bytes on the object store, plus
+    (optional) per-column dtype widths so size estimates scale with the
+    bytes a plan actually touches instead of a flat column count."""
     table_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    column_widths: dict[str, dict[str, int]] = \
+        dataclasses.field(default_factory=dict)
 
     @staticmethod
     def from_store(store, table_keys: dict[str, list[str]]) -> "Stats":
-        out = {}
+        out: dict[str, float] = {}
+        widths: dict[str, dict[str, int]] = {}
         for table, keys in table_keys.items():
             try:
                 out[table] = float(sum(store.size(k) for k in keys))
             except KeyError:
                 continue
-        return Stats(out)
+            if keys:
+                try:
+                    # Header-only peek at the first partition object.
+                    from repro.engine import columnar
+                    widths[table] = columnar.schema_widths(
+                        store.get(keys[0]))
+                except Exception:
+                    pass   # width-unaware estimates still work
+        return Stats(out, widths)
 
     def bytes_for(self, table: str) -> Optional[float]:
         return self.table_bytes.get(table)
+
+    def widths_for(self, table: str) -> Optional[dict[str, int]]:
+        return self.column_widths.get(table) or None
+
+
+# Width assumed for derived/unknown columns (f64) in width-aware
+# estimates.
+DEFAULT_COLUMN_WIDTH = 8
 
 
 @dataclasses.dataclass
@@ -197,7 +258,7 @@ def _prune(node, required: Optional[set], trace: list[str]):
         if node.columns is None or len(cols) < len(node.columns):
             trace.append(f"projection_pruning: scan({node.table}) "
                          f"columns -> {cols}")
-        return Scan(node.table, cols)
+        return Scan(node.table, cols, partitioned_by=node.partitioned_by)
     if isinstance(node, Filter):
         need = None if required is None else \
             required | logical.pred_columns(node.predicate)
@@ -251,17 +312,41 @@ class _Pipe:
     est_bytes: Optional[float] = None
     has_join: bool = False
     has_agg: bool = False
+    # Output-partitioning property: rows of fragment i satisfy
+    # ``part[0] % part[1] == i`` under the CURRENT schema's column names
+    # (renames tracked). ``input_part`` is the same property named as the
+    # upstream producer emits it (``ShuffleOutput.partition_by`` /
+    # declared table key) — recorded as ``Pipeline.partitioning`` when an
+    # elision relied on it (``relied``).
+    part: Optional[tuple[str, int]] = None
+    input_part: Optional[tuple[str, int]] = None
+    # Declared layout of a TableInput build side read directly as
+    # partition slices (recorded as ``Pipeline.partitioning2``).
+    input_part2: Optional[tuple[str, int]] = None
+    relied: bool = False
+    # Why ``part`` is None when a property existed upstream (trace only).
+    part_note: Optional[str] = None
+    # Per-column dtype widths (bytes/value) under the current schema,
+    # None when unknown; drives width-aware size estimates.
+    col_widths: Optional[dict[str, int]] = None
+
+    def width_sum(self, cols) -> Optional[float]:
+        if self.col_widths is None:
+            return None
+        return float(sum(self.col_widths.get(c, DEFAULT_COLUMN_WIDTH)
+                         for c in cols))
 
 
 class _Lowering:
     def __init__(self, query: LogicalQuery, stats: Optional[Stats],
                  backend: str, bench_path: Optional[str],
-                 trace: list[str]):
+                 trace: list[str], elide: bool = True):
         self.query = query
         self.stats = stats or Stats()
         self.backend = backend
         self.bench_path = bench_path
         self.trace = trace
+        self.elide = elide
         self.pipelines: list[Pipeline] = []
         self._names: dict[str, int] = {}
 
@@ -276,9 +361,21 @@ class _Lowering:
         if pipe.has_join:
             base = "join_agg" if pipe.has_agg else "join"
         name = self._unique(base)
+        partitioning = None
+        fragments = None
+        if pipe.relied and pipe.input_part is not None:
+            partitioning = {"key": pipe.input_part[0],
+                            "fanout": pipe.input_part[1]}
+            if isinstance(pipe.input, TableInput):
+                # Declared table partitioning: stored partition i must BE
+                # fragment i, so the parallelism is pinned to the fan-out.
+                fragments = pipe.input_part[1]
         self.pipelines.append(Pipeline(
             name=name, input=pipe.input, ops=pipe.ops, output=output,
-            input2=pipe.input2))
+            input2=pipe.input2, fragments=fragments,
+            partitioning=partitioning,
+            partitioning2=None if pipe.input_part2 is None else
+            {"key": pipe.input_part2[0], "fanout": pipe.input_part2[1]}))
         return name
 
     # -- physical choices ---------------------------------------------------
@@ -316,10 +413,30 @@ class _Lowering:
                 raise LogicalError(
                     f"scan({node.table!r}) reached lowering without "
                     "columns; declare them or reference them upstream")
-            return _Pipe(input=TableInput(node.table, list(node.columns)),
+            cols = list(node.columns)
+            est = self.stats.bytes_for(node.table)
+            widths = self.stats.widths_for(node.table)
+            col_widths = None
+            if widths is not None:
+                col_widths = {c: widths.get(c, DEFAULT_COLUMN_WIDTH)
+                              for c in cols}
+                total = float(sum(widths.values()))
+                if est is not None and total > 0:
+                    # Projection pushdown reads only the scanned columns'
+                    # bytes; scale by their dtype widths, not count.
+                    est *= sum(col_widths.values()) / total
+            part = None
+            if node.partitioned_by is not None \
+                    and node.partitioned_by[0] in cols:
+                part = (node.partitioned_by[0], node.partitioned_by[1])
+                self.trace.append(
+                    f"partition_property: scan({node.table}) declared "
+                    f"partitioned hash({part[0]}) % {part[1]}")
+            return _Pipe(input=TableInput(node.table, cols),
                          base_name=f"scan_{node.table}",
-                         schema=list(node.columns),
-                         est_bytes=self.stats.bytes_for(node.table))
+                         schema=cols, est_bytes=est,
+                         part=part, input_part=part,
+                         col_widths=col_widths)
         if isinstance(node, Filter):
             pipe = self.build(node.child)
             pipe.ops.append({"op": "filter", "expr": node.predicate})
@@ -331,9 +448,34 @@ class _Lowering:
             pipe.ops.append({"op": "project", "columns": node.columns})
             new_schema = [c if isinstance(c, str) else c[0]
                           for c in node.columns]
-            if pipe.est_bytes is not None and pipe.schema:
-                pipe.est_bytes *= len(new_schema) / max(1, len(pipe.schema))
+            new_widths = None
+            if pipe.col_widths is not None:
+                new_widths = {}
+                for c in node.columns:
+                    if isinstance(c, str):
+                        new_widths[c] = pipe.col_widths.get(
+                            c, DEFAULT_COLUMN_WIDTH)
+                    elif isinstance(c[1], str):      # pure rename
+                        new_widths[c[0]] = pipe.col_widths.get(
+                            c[1], DEFAULT_COLUMN_WIDTH)
+                    else:                            # derived: f64
+                        new_widths[c[0]] = DEFAULT_COLUMN_WIDTH
+            if pipe.est_bytes is not None:
+                old_w = pipe.width_sum(pipe.schema) if pipe.schema else None
+                new_w = None if new_widths is None else \
+                    float(sum(new_widths.values()))
+                if old_w and new_w is not None:
+                    pipe.est_bytes *= new_w / old_w
+                elif pipe.schema:
+                    pipe.est_bytes *= len(new_schema) / max(1,
+                                                            len(pipe.schema))
             pipe.schema = new_schema
+            pipe.col_widths = new_widths
+            new_part = _project_part(pipe.part, node.columns)
+            if pipe.part is not None and new_part is None:
+                pipe.part_note = (f"was {_fmt_part(pipe.part)} until a "
+                                  f"projection dropped {pipe.part[0]}")
+            pipe.part = new_part
             return pipe
         if isinstance(node, Udf):
             pipe = self.build(node.child)
@@ -343,6 +485,11 @@ class _Lowering:
             pipe.ops.append(op)
             pipe.schema = list(node.output_columns) \
                 if node.output_columns else None
+            if pipe.part is not None:   # UDFs may rewrite rows arbitrarily
+                pipe.part_note = (f"was {_fmt_part(pipe.part)} until udf "
+                                  f"{node.name}")
+            pipe.part = None
+            pipe.col_widths = None
             return pipe
         if isinstance(node, Join):
             return self._build_join(node)
@@ -353,6 +500,9 @@ class _Lowering:
     def _build_join(self, node: Join) -> _Pipe:
         left = self.build(node.left)
         right = self.build(node.right)
+        elided = self._try_elide_join(node, left, right)
+        if elided is not None:
+            return elided
         # Build side: the smaller estimated input is held in memory;
         # ties (and missing stats) keep the right side as build, which
         # preserves the conventional fact-probes-dimension authoring
@@ -393,16 +543,141 @@ class _Lowering:
             ops.append({"op": "project", "columns": [
                 [node.left_on, node.right_on] if c == node.left_on else c
                 for c in out_schema]})
+        self.trace.append(
+            f"partition_property: join inputs co-partitioned "
+            f"hash({probe_on}) % {parts} ('{probe_name}'/'{build_name}')")
         pipe = _Pipe(input=ShuffleInput(probe_name),
                      input2=ShuffleInput(build_name),
                      base_name="join",
                      ops=ops,
                      schema=out_schema, est_bytes=probe.est_bytes,
-                     has_join=True)
+                     has_join=True,
+                     # The join output inherits the co-partitioning: probe
+                     # rows never leave their fragment and the build key's
+                     # values equal the probe key's.
+                     part=(node.left_on, parts),
+                     input_part=(probe_on, parts),
+                     col_widths=_merge_widths(left, right, node.right_on))
         return pipe
+
+    def _try_elide_join(self, node: Join, left: _Pipe,
+                        right: _Pipe) -> Optional[_Pipe]:
+        """Co-partition join elision: a side already partitioned by its
+        join key continues in place as the probe — its row shuffle
+        disappears. The other side shuffles at the SAME fan-out
+        (co-partitioning is a correctness requirement, so the row-shuffle
+        hint is ignored), or, when it is itself an already-aligned
+        pass-through, its producer's partition slices are read directly
+        as the build input with no rewrite. Emits a kept-line when the
+        rule fires but cannot elide, so explain always shows it."""
+        if not self.elide:
+            return None
+        lprop = left.part if left.part is not None \
+            and left.part[0] == node.left_on else None
+        rprop = right.part if right.part is not None \
+            and right.part[0] == node.right_on else None
+        if lprop is None and rprop is None:
+            self.trace.append(
+                f"shuffle_elision: join on {node.left_on} kept (neither "
+                f"input is partitioned by its join key: left "
+                f"{_fmt_part(left.part)}, right {_fmt_part(right.part)})")
+            return None
+        candidates = []
+        if lprop is not None:
+            candidates.append((left, right, node.left_on, node.right_on,
+                               False, lprop))
+        if rprop is not None:
+            candidates.append((right, left, node.right_on, node.left_on,
+                               True, rprop))
+        skip_reason = None
+        for probe, build, probe_on, build_on, swapped, prop in candidates:
+            if probe.input2 is not None:
+                continue   # pipeline already carries a build side
+            if swapped and node.left_on != node.right_on and (
+                    left.schema is None or right.schema is None):
+                continue   # cannot emit the key-restoring rename
+            n = prop[1]
+            if build.est_bytes is not None:
+                # The build is forced to the probe's fan-out and each
+                # fragment holds one build slice in memory: refuse an
+                # elision whose forced co-partitioning leaves slices far
+                # beyond the target partition size — the unelided plan's
+                # size-based build choice and fan-out win there.
+                slice_budget = self._cpu_bw() * TARGET_PARTITION_SECONDS \
+                    * ELIDE_BUILD_SLICE_FACTOR
+                if build.est_bytes / max(1, n) > slice_budget:
+                    skip_reason = (
+                        f"forced fan-out {n} leaves "
+                        f"~{build.est_bytes / max(1, n) / MIB:.0f} MiB "
+                        f"build slices per fragment (budget "
+                        f"~{slice_budget / MIB:.0f} MiB); size-based "
+                        f"plan wins")
+                    continue
+            build_part2 = None
+            build_aligned = build.part is not None \
+                and build.part[0] == build_on and build.part[1] == n \
+                and not build.ops and build.input2 is None
+            if build_aligned and isinstance(build.input, ShuffleInput):
+                # Already-aligned pass-through: no build-side rewrite —
+                # the join reads its producer's partition slices directly.
+                build_input = build.input
+                self.trace.append(
+                    f"shuffle_elision: both join sides already "
+                    f"co-partitioned hash({probe_on}) % {n}; probe "
+                    f"continues in place, build reads "
+                    f"'{build.input.from_pipeline}' partition slices "
+                    f"directly (both row shuffles elided)")
+            elif build_aligned and isinstance(build.input, TableInput):
+                # Declared hash-partitioned base table: fragment i reads
+                # stored partition i as its build slice — no shuffle, no
+                # rewrite (the worker re-verifies the declared layout).
+                build_input = build.input
+                build_part2 = build.input_part
+                self.trace.append(
+                    f"shuffle_elision: build side reads table "
+                    f"'{build.input.table}' stored partition slices "
+                    f"directly (declared hash({build_on}) % {n} layout; "
+                    f"both row shuffles elided)")
+            else:
+                build_name = self._close(build,
+                                         ShuffleOutput(build_on, n))
+                build_input = ShuffleInput(build_name)
+                self.trace.append(
+                    f"shuffle_elision: probe-side row shuffle on "
+                    f"{probe_on} elided (input already partitioned "
+                    f"hash({probe_on}) % {n}); build '{build_name}' "
+                    f"shuffles at the same fan-out (forced)")
+            probe.ops.append({"op": "hash_join", "left_key": probe_on,
+                              "right_key": build_on})
+            out_schema = logical.join_output_schema(
+                left.schema, right.schema, node.right_on)
+            if swapped and node.left_on != node.right_on:
+                # The continued (physical-right) probe keeps right_on;
+                # rename it back to the logical left key.
+                probe.ops.append({"op": "project", "columns": [
+                    [node.left_on, node.right_on] if c == node.left_on
+                    else c for c in out_schema]})
+            probe.input2 = build_input
+            probe.input_part2 = build_part2
+            probe.has_join = True
+            probe.schema = out_schema
+            probe.col_widths = _merge_widths(left, right, node.right_on)
+            probe.part = (node.left_on, n)
+            probe.relied = True
+            return probe
+        self.trace.append(
+            f"shuffle_elision: join on {node.left_on} kept ("
+            + (skip_reason or
+               "the pre-partitioned side cannot continue in place: it "
+               "already joins, or the key rename needs unknown schemas")
+            + ")")
+        return None
 
     def _build_aggregate(self, node: Aggregate) -> _Pipe:
         pipe = self.build(node.child)
+        elided = self._try_elide_combine(node, pipe)
+        if elided is not None:
+            return elided
         partial = [[a.name, a.fn, a.column] for a in node.aggs]
         pipe.ops.append({"op": "hash_agg", "keys": list(node.keys),
                          "aggs": partial})
@@ -443,11 +718,114 @@ class _Lowering:
         return _Pipe(input=ShuffleInput(name), base_name="final_agg",
                      ops=[{"op": "hash_agg", "keys": list(node.keys),
                            "aggs": final}],
-                     schema=out_cols, est_bytes=est_out, has_agg=True)
+                     schema=out_cols, est_bytes=est_out, has_agg=True,
+                     # The combine shuffle partitions by a group key, so
+                     # the final aggregate's output is itself partitioned
+                     # by it — downstream joins/aggs on it can elide.
+                     part=(combine_key, parts),
+                     input_part=(combine_key, parts),
+                     col_widths=_agg_widths(pipe, node))
+
+    def _try_elide_combine(self, node: Aggregate,
+                           pipe: _Pipe) -> Optional[_Pipe]:
+        """Combine-shuffle elision: when the producing pipeline is
+        already partitioned by one of the aggregate's group keys (or
+        lives in a single fragment), every group-key class is confined to
+        one fragment — the partial and final aggregates collapse into ONE
+        fragment-local aggregation and the combine shuffle (write + read
+        + final fragments) disappears entirely. Emits a kept-line when
+        the rule fires but cannot elide."""
+        if not self.elide:
+            return None
+        prop = pipe.part
+        keys = list(node.keys)
+        elidable = prop is not None and (prop[1] == 1
+                                         or (keys and prop[0] in keys))
+        combine_key = keys[0] if keys else node.aggs[0].name
+        if not elidable:
+            if prop is not None:
+                reason = (f"producer partitioned {_fmt_part(prop)}, "
+                          "not by a group key")
+            else:
+                reason = pipe.part_note or \
+                    "producer output is not hash-partitioned"
+            self.trace.append(f"shuffle_elision: combine on {combine_key} "
+                              f"kept ({reason})")
+            return None
+        aggs = [[a.name, a.fn, a.column] for a in node.aggs]
+        pipe.ops.append({"op": "hash_agg", "keys": keys, "aggs": aggs})
+        pipe.has_agg = True
+        out_cols = keys + [a.name for a in node.aggs]
+        pipe.schema = out_cols
+        pipe.est_bytes = AGG_EST_OUTPUT_BYTES if pipe.est_bytes is None \
+            else pipe.est_bytes * AGG_OUTPUT_FRACTION
+        pipe.col_widths = _agg_widths(pipe, node)
+        pipe.relied = True
+        why = (f"group key {prop[0]}" if keys and prop is not None
+               and prop[0] in keys else "single fragment")
+        self.trace.append(
+            f"shuffle_elision: aggregate combine on {combine_key} ELIDED "
+            f"(producer already partitioned {_fmt_part(prop)}, {why}); "
+            f"partial+final collapse into one fragment-local hash_agg — "
+            f"no combine shuffle is written")
+        # Groups keep the producer's partitioning (every group's key
+        # class stays in its fragment); keyless single-fragment output is
+        # trivially partitioned at fan-out 1.
+        if keys and prop is not None and prop[0] in keys:
+            pipe.part = prop
+        elif prop is not None and prop[1] == 1:
+            pipe.part = (out_cols[0], 1)
+        else:
+            pipe.part = None
+        return pipe
 
 
 def _fmt_bytes(b: Optional[float]) -> str:
     return "unknown size" if b is None else f"~{b / MIB:.1f} MiB"
+
+
+def _agg_widths(pipe: "_Pipe", node: Aggregate) -> dict[str, int]:
+    """Column widths of an aggregate output (aggregates emit f64)."""
+    out = {}
+    for k in node.keys:
+        out[k] = DEFAULT_COLUMN_WIDTH if pipe.col_widths is None \
+            else pipe.col_widths.get(k, DEFAULT_COLUMN_WIDTH)
+    for a in node.aggs:
+        out[a.name] = DEFAULT_COLUMN_WIDTH
+    return out
+
+
+def _merge_widths(left: _Pipe, right: _Pipe,
+                  right_on: str) -> Optional[dict[str, int]]:
+    """Column widths of a join output (build key dropped)."""
+    if left.col_widths is None or right.col_widths is None:
+        return None
+    out = dict(left.col_widths)
+    for c, w in right.col_widths.items():
+        if c != right_on:
+            out[c] = w
+    return out
+
+
+def _project_part(part: Optional[tuple[str, int]],
+                  columns: list) -> Optional[tuple[str, int]]:
+    """Partitioning property through a projection: survives when the
+    partition column is kept (bare keeps win over pure renames)."""
+    if part is None:
+        return None
+    key, n = part
+    for c in columns:
+        if isinstance(c, str) and c == key:
+            return (key, n)
+    for c in columns:
+        if not isinstance(c, str) and isinstance(c[1], str) and c[1] == key:
+            return (c[0], n)
+    return None
+
+
+def _fmt_part(part: Optional[tuple[str, int]]) -> str:
+    return "not hash-partitioned" if part is None \
+        else f"hash({part[0]}) % {part[1]}"
 
 
 # ---------------------------------------------------------------------------
@@ -455,14 +833,18 @@ def _fmt_bytes(b: Optional[float]) -> str:
 # ---------------------------------------------------------------------------
 
 def lower(query: LogicalQuery, stats: Optional[Stats] = None,
-          backend: str = "numpy", bench_path: Optional[str] = None
-          ) -> tuple[QueryPlan, PlanReport]:
+          backend: str = "numpy", bench_path: Optional[str] = None,
+          shuffle_elision: bool = True) -> tuple[QueryPlan, PlanReport]:
     """Optimize and lower a logical query. Returns the physical plan plus
-    the report of applied rules (see ``engine.explain``)."""
+    the report of applied rules (see ``engine.explain``).
+    ``shuffle_elision=False`` disables the partitioning-property elision
+    rules — parity tests and benchmarks lower both variants from the same
+    logical query."""
     trace: list[str] = []
     root = _pushdown(query.root, [], trace)
     root = _prune(root, None, trace)
-    low = _Lowering(query, stats, backend, bench_path, trace)
+    low = _Lowering(query, stats, backend, bench_path, trace,
+                    elide=shuffle_elision)
     pipe = low.build(root)
     low._close(pipe, CollectOutput())
     plan = QueryPlan(query.name, low.pipelines)
@@ -471,9 +853,10 @@ def lower(query: LogicalQuery, stats: Optional[Stats] = None,
 
 
 def plan(query: LogicalQuery, stats: Optional[Stats] = None,
-         backend: str = "numpy",
-         bench_path: Optional[str] = None) -> QueryPlan:
+         backend: str = "numpy", bench_path: Optional[str] = None,
+         shuffle_elision: bool = True) -> QueryPlan:
     """``lower`` without the report — the one-call path for query
     builders."""
     return lower(query, stats=stats, backend=backend,
-                 bench_path=bench_path)[0]
+                 bench_path=bench_path,
+                 shuffle_elision=shuffle_elision)[0]

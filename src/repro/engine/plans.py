@@ -77,10 +77,25 @@ class Pipeline:
     input: object                       # TableInput | ShuffleInput
     ops: list[dict]
     output: object                      # ShuffleOutput | CollectOutput
-    input2: Optional[ShuffleInput] = None
+    # Build side of a hash_join: a ShuffleInput co-partitioned with
+    # ``input``, or a TableInput whose stored partition i IS hash
+    # partition i (declared layout, ``partitioning2`` required) so the
+    # join reads the table's partition slices directly with no shuffle.
+    input2: Optional[object] = None
     # legacy {left_key, right_key}; prefer a hash_join op in ``ops``
     join: Optional[dict] = None
     fragments: Optional[int] = None     # fixed parallelism (else coordinator)
+    # Input partitioning property the planner RELIED on to elide a shuffle:
+    # {"key": <column in the producer's output>, "fanout": n} asserts that
+    # fragment i of this pipeline receives exactly the rows with
+    # ``hash(key) % fanout == i``. For a ShuffleInput the property must
+    # match the producer's ShuffleOutput (validate() checks); for a
+    # TableInput it declares that stored partition i IS hash partition i
+    # (``logical.Scan.partitioned_by``) and the worker verifies it against
+    # the actual key values at runtime. ``partitioning2`` is the same
+    # declaration for a TableInput build side (``input2``).
+    partitioning: Optional[dict] = None
+    partitioning2: Optional[dict] = None
 
     def deps(self) -> list[str]:
         out = []
@@ -150,8 +165,12 @@ def _pipeline_schema(pipe: "Pipeline", schemas: dict,
         elif kind == "hash_agg":
             cols = list(op["keys"]) + [a[0] for a in op["aggs"]]
         elif kind == "hash_join":
-            build = None if pipe.input2 is None else \
-                schemas.get(pipe.input2.from_pipeline)
+            if pipe.input2 is None:
+                build = None
+            elif isinstance(pipe.input2, TableInput):
+                build = list(pipe.input2.columns)
+            else:
+                build = schemas.get(pipe.input2.from_pipeline)
             if build is not None and op.get("right_key") not in build:
                 err(f"hash_join right_key {op.get('right_key')!r} not "
                     f"produced by build side (have {sorted(build)})")
@@ -163,6 +182,46 @@ def _pipeline_schema(pipe: "Pipeline", schemas: dict,
     return cols
 
 
+def _check_partitioning(pipe: "Pipeline", by_name: dict) -> list[str]:
+    """Structural checks for a declared (relied-on) input partitioning:
+    the property must be exactly what the upstream shuffle established —
+    an elided stage with a wrong property silently drops or duplicates
+    groups, so this fails fast instead."""
+    part = pipe.partitioning
+    errs = []
+    if not isinstance(part, dict) or "key" not in part \
+            or "fanout" not in part:
+        return [f"malformed partitioning {part!r} "
+                "(need {'key': ..., 'fanout': ...})"]
+    if isinstance(pipe.input, ShuffleInput):
+        prod = by_name.get(pipe.input.from_pipeline)
+        if prod is not None and isinstance(prod.output, ShuffleOutput):
+            if prod.output.partition_by != part["key"]:
+                errs.append(
+                    f"partitioning key {part['key']!r} does not match "
+                    f"producer {prod.name!r}'s shuffle partition key "
+                    f"{prod.output.partition_by!r}")
+            if prod.output.partitions != part["fanout"]:
+                errs.append(
+                    f"partitioning fan-out {part['fanout']} does not "
+                    f"match producer {prod.name!r}'s "
+                    f"{prod.output.partitions} shuffle partitions")
+    elif isinstance(pipe.input, TableInput):
+        # A declared pre-partitioned base table: the key must be scanned
+        # (the worker verifies values % fanout at runtime) and the
+        # fragment count must be pinned to the fan-out so stored
+        # partition i lands on fragment i.
+        if part["key"] not in pipe.input.columns:
+            errs.append(f"partitioning key {part['key']!r} is not among "
+                        f"the scanned columns {pipe.input.columns}")
+        if pipe.fragments != part["fanout"]:
+            errs.append(
+                f"declared table partitioning fan-out {part['fanout']} "
+                f"requires fragments={part['fanout']} "
+                f"(got {pipe.fragments!r})")
+    return errs
+
+
 @dataclasses.dataclass
 class QueryPlan:
     name: str
@@ -172,7 +231,10 @@ class QueryPlan:
         """Fail-fast structural checks, run by the coordinator before
         scheduling: duplicate pipeline names, dangling or out-of-order
         ``ShuffleInput.from_pipeline`` references, unknown op names,
-        ``hash_join`` without a build-side ``input2``, op inputs and
+        ``hash_join`` without a build-side ``input2`` (or with more than
+        one join per pipeline), join inputs whose producers shuffle at
+        different fan-outs, declared ``partitioning`` properties that
+        disagree with the upstream shuffle (elided stages), op inputs and
         shuffle partition keys no upstream op produces, and a terminal
         pipeline that never collects. Raises ``PlanValidationError`` listing every problem —
         these misfires otherwise surface as opaque KeyErrors deep in
@@ -202,11 +264,53 @@ class QueryPlan:
             seen.append(p.name)
         schemas: dict = {}
         for p in self.pipelines:
-            has_join = p.join is not None or \
-                any(op.get("op") == "hash_join" for op in p.ops)
-            if has_join and p.input2 is None:
+            n_joins = (1 if p.join is not None else 0) + \
+                sum(1 for op in p.ops if op.get("op") == "hash_join")
+            if n_joins and p.input2 is None:
                 errors.append(f"pipeline {p.name!r}: hash_join without a "
                               "build-side input2")
+            if n_joins > 1:
+                # One build-side input per pipeline: a second hash_join op
+                # (e.g. from a botched join elision) would silently probe
+                # the wrong build batch.
+                errors.append(f"pipeline {p.name!r}: {n_joins} hash_join "
+                              "ops but only one build-side input2")
+            if n_joins and isinstance(p.input, ShuffleInput) \
+                    and isinstance(p.input2, ShuffleInput):
+                # Join inputs must be co-partitioned: fragment i probes
+                # partition i of both sides, so differing fan-outs pair
+                # probe rows with the wrong build slice.
+                prod = by_name.get(p.input.from_pipeline)
+                prod2 = by_name.get(p.input2.from_pipeline)
+                if prod is not None and prod2 is not None \
+                        and isinstance(prod.output, ShuffleOutput) \
+                        and isinstance(prod2.output, ShuffleOutput) \
+                        and prod.output.partitions != prod2.output.partitions:
+                    errors.append(
+                        f"pipeline {p.name!r}: join inputs are not "
+                        f"co-partitioned ({prod.name!r} shuffles "
+                        f"{prod.output.partitions} partitions, "
+                        f"{prod2.name!r} shuffles "
+                        f"{prod2.output.partitions})")
+            if isinstance(p.input2, TableInput):
+                # A base table as build side only works when its stored
+                # partitions ARE the join's hash partitions — the planner
+                # must have declared (and the worker will verify) that.
+                if p.partitioning2 is None:
+                    errors.append(
+                        f"pipeline {p.name!r}: TableInput build side "
+                        f"({p.input2.table!r}) without a declared "
+                        "partitioning2 — its stored partitions cannot be "
+                        "assumed to be hash partitions")
+                elif p.partitioning2.get("key") not in p.input2.columns:
+                    errors.append(
+                        f"pipeline {p.name!r}: partitioning2 key "
+                        f"{p.partitioning2.get('key')!r} is not among the "
+                        f"build-side columns {p.input2.columns}")
+            if p.partitioning is not None:
+                errors.extend(
+                    f"pipeline {p.name!r}: {m}"
+                    for m in _check_partitioning(p, by_name))
             schema = _pipeline_schema(p, schemas, errors)
             schemas[p.name] = schema
             if isinstance(p.output, ShuffleOutput) and schema is not None \
@@ -251,7 +355,9 @@ class QueryPlan:
                 out = CollectOutput()
             pipelines.append(Pipeline(p["name"], inp, p["ops"], out,
                                       input2=inp2, join=p.get("join"),
-                                      fragments=p.get("fragments")))
+                                      fragments=p.get("fragments"),
+                                      partitioning=p.get("partitioning"),
+                                      partitioning2=p.get("partitioning2")))
         return QueryPlan(raw["name"], pipelines)
 
 

@@ -57,6 +57,19 @@ class FragmentSpec:
     output: dict = dataclasses.field(default_factory=dict)
     backend: str = "jit"                # "jit" (default) | "numpy" (reference)
     missing_ok: bool = False            # inputs may be skipped-empty objects
+    # Input partitioning the planner RELIED on to elide a shuffle
+    # ({"key": ..., "fanout": n}, from ``Pipeline.partitioning``): this
+    # fragment must hold exactly the rows with ``key % fanout ==
+    # fragment``, and the worker verifies that against the actual key
+    # values before executing — a violated property would silently
+    # duplicate or split groups instead of erroring. ``partitioning2``
+    # is the build side's declared layout when ``read_keys2`` point at a
+    # base table's stored partition slices instead of shuffle objects
+    # (``columns2`` projects them; such reads are not missing-tolerant).
+    partitioning: dict | None = None
+    partitioning2: dict | None = None
+    columns2: list[str] | None = None
+    missing_ok2: bool = True            # build side defaults to shuffle reads
 
 
 @dataclasses.dataclass
@@ -154,9 +167,12 @@ def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
         ops.insert(0, {"op": "hash_join", **spec.join})
     join_ops = [op for op in ops if op.get("op") == "hash_join"]
     if join_ops:
-        # Build side is always shuffle output, so always missing-tolerant.
-        build = _read_side(store, spec.read_keys2, None, metrics,
-                           missing_ok=True, registry=registry)
+        # Build side: shuffle objects are missing-tolerant (writers skip
+        # empty partitions); direct table-partition reads are not.
+        build = _read_side(store, spec.read_keys2, spec.columns2, metrics,
+                           missing_ok=spec.missing_ok2, registry=registry)
+        _validate_partitioning(build, spec.partitioning2, spec,
+                               side="build")
         resolved = []
         for op in ops:
             if op.get("op") == "hash_join" and "build" not in op:
@@ -166,12 +182,43 @@ def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
     return _resolve_broadcasts(store, ops, metrics)
 
 
+def _validate_partitioning(batch: ColumnBatch, part: Optional[dict],
+                           spec: FragmentSpec, side: str = "input") -> None:
+    """Verify a relied-on partitioning property against the actual data:
+    every row's ``key % fanout`` must equal this fragment's id. Elided
+    shuffles are only sound under that property, so a violation (lying
+    ``Scan.partitioned_by`` declaration, mis-keyed shuffle) fails loudly
+    here instead of producing silently wrong aggregates/joins."""
+    if part is None or batch.num_rows == 0:
+        return
+    fanout = int(part["fanout"])
+    if fanout <= 1:
+        return   # a single fragment trivially holds every class
+    key = np.asarray(batch[part["key"]])
+    # Same assignment as operators.radix_partition: int64 truncation then
+    # modulo, for EVERY dtype — so a float-keyed declaration is verified
+    # under the exact rule the engine's partitioner uses, not skipped.
+    got = key.astype(np.int64) % fanout
+    bad = got != spec.fragment
+    if bad.any():
+        example = key[np.argmax(bad)]
+        raise RuntimeError(
+            f"pipeline {spec.pipeline!r} fragment {spec.fragment}: {side} "
+            f"violates the relied-on partitioning hash({part['key']}) % "
+            f"{fanout} ({int(bad.sum())} of {batch.num_rows} rows belong "
+            f"to other partitions, e.g. key "
+            f"{example!r}) — the planner elided a shuffle "
+            "based on this property; the declared table layout or "
+            "upstream shuffle is wrong")
+
+
 def execute_fragment(store: ObjectStore, spec: FragmentSpec,
                      registry: Optional[ShuffleRegistry] = None
                      ) -> FragmentMetrics:
     metrics = FragmentMetrics()
     batch = _read_side(store, spec.read_keys, spec.columns, metrics,
                        missing_ok=spec.missing_ok, registry=registry)
+    _validate_partitioning(batch, spec.partitioning, spec)
     ops = _normalize_ops(store, spec, metrics, registry)
 
     out = spec.output
@@ -195,8 +242,11 @@ def execute_fragment(store: ObjectStore, spec: FragmentSpec,
             registry.record(spec.query_id, spec.pipeline, spec.fragment,
                             bitmap)
     else:
-        batch = engine_compile.run_pipeline(batch, ops,
-                                            backend=spec.backend)
+        # Collect fragments route through the collapsed-agg-aware driver:
+        # an elided (fragment-local, full) trailing hash_agg fuses with
+        # its preceding segment exactly like a shuffle fragment's would.
+        batch = engine_compile.run_pipeline_collect(batch, ops,
+                                                    backend=spec.backend)
         metrics.rows_out = batch.num_rows
         data = columnar.serialize_frame(batch)
         store.put(result_key(spec.query_id, spec.pipeline, spec.fragment),

@@ -16,18 +16,6 @@ from repro.sharding import rules as shrules
 
 REPO = Path(__file__).resolve().parents[1]
 
-# Pre-existing seed failures, untouched by the engine work: the pinned
-# jax removed the top-level ``jax.shard_map`` alias these MoE expert-
-# parallel / grad-compression paths (and their tolerance envelopes) were
-# written against. Marked xfail(strict=False) so tier-1 signal stays
-# clean while the port to ``jax.experimental.shard_map`` (or the new
-# location) is pending — tracked in ROADMAP "Tier-1 note".
-_seed_shard_map_xfail = pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure: jax.shard_map alias missing in "
-           "pinned jax (MoE expert-parallel + grad-compression "
-           "tolerances); see ROADMAP tier-1 note")
-
 
 def _run_subprocess(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
@@ -64,7 +52,6 @@ def test_pspec_no_duplicate_axes():
     assert len(flat) == len(set(flat))
 
 
-@_seed_shard_map_xfail
 def test_train_and_serve_sharded_execution():
     """Real sharded execution of reduced configs on an 8-device host mesh:
     train step runs, loss finite; MoE EP path (shard_map all_to_all) used."""
@@ -100,7 +87,6 @@ def test_train_and_serve_sharded_execution():
     assert len(lines) == 2
 
 
-@_seed_shard_map_xfail
 def test_moe_ep_equals_single_device():
     """EP (shard_map + all_to_all) must equal the single-device MoE math."""
     out = _run_subprocess("""
@@ -132,7 +118,6 @@ def test_moe_ep_equals_single_device():
     assert "err" in out
 
 
-@_seed_shard_map_xfail
 def test_decode_ep_psum_path():
     """Decode (S=1) uses the psum EP path; equals single-device."""
     out = _run_subprocess("""
@@ -160,7 +145,6 @@ def test_decode_ep_psum_path():
     assert "err" in out
 
 
-@_seed_shard_map_xfail
 def test_grad_compression_ef_int8():
     """Compressed pod-axis reduction: exact shared-scale dequant + error
     feedback keeps the running mean unbiased."""

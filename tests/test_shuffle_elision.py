@@ -1,0 +1,552 @@
+"""Partitioning-property tracking & shuffle elision: plan-shape golden
+tests for the two elision rules, validate() rules for elided stages,
+runtime partitioning verification, elided-vs-unelided result parity on
+both backends (with a spy asserting ZERO shuffle objects are written for
+elided stages), the fused collapsed-agg collect path, width-aware size
+estimates, and a hypothesis sweep showing pre-partitioned inputs never
+change results."""
+import json
+
+import numpy as np
+import pytest
+
+from hypo_compat import HAS_HYPOTHESIS, given, settings, st
+from repro.core.storage_service import ObjectStore
+from repro.engine import columnar, compile as engine_compile
+from repro.engine import datagen, explain, operators, optimizer, worker
+from repro.engine.columnar import ColumnBatch
+from repro.engine.coordinator import Coordinator
+from repro.engine.logical import col, count_, max_, scan, sum_
+from repro.engine.plans import (CollectOutput, Pipeline, PlanValidationError,
+                                QueryPlan, ShuffleInput, ShuffleOutput,
+                                TableInput)
+
+MIB = 1024.0 ** 2
+
+
+# ---------------------------------------------------------------------------
+# Logical queries under test
+# ---------------------------------------------------------------------------
+
+def _agg_after_join_query(partitioned: bool = False, n: int = 8,
+                          name: str = "agg_join"):
+    """Q12-style agg-after-join, grouped by the JOIN key, so the combine
+    shuffle is elidable. With ``partitioned=True`` the base tables declare
+    a hash-partitioned layout and the row shuffles go too."""
+    pb_li = ("l_orderkey", n) if partitioned else None
+    pb_o = ("o_orderkey", n) if partitioned else None
+    return (
+        scan("lineitem", ["l_orderkey", "l_extendedprice", "l_discount"],
+             partitioned_by=pb_li)
+        .join(scan("orders", ["o_orderkey", "o_totalprice"],
+                   partitioned_by=pb_o),
+              on=("l_orderkey", "o_orderkey"))
+        .select("l_orderkey",
+                (col("l_extendedprice") * (1 - col("l_discount")))
+                .alias("revenue"),
+                "o_totalprice")
+        .group_by("l_orderkey")
+        .agg(sum_("revenue").alias("revenue"),
+             count_("revenue").alias("n_lines"),
+             max_("o_totalprice").alias("o_total"))
+        .collect(name, shuffle_partitions=n))
+
+
+def _reference(li: ColumnBatch, orders: ColumnBatch) -> dict:
+    prices = dict(zip(orders["o_orderkey"].tolist(),
+                      orders["o_totalprice"].tolist()))
+    rev = li["l_extendedprice"] * (1 - li["l_discount"])
+    out: dict = {}
+    for k, r in zip(li["l_orderkey"].tolist(), rev.tolist()):
+        if k in prices:
+            s, c = out.get(k, (0.0, 0))
+            out[k] = (s + r, c + 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan shape: the two elision rules
+# ---------------------------------------------------------------------------
+
+def test_combine_elision_collapses_agg_after_join():
+    plan, report = optimizer.lower(_agg_after_join_query())
+    assert [p.name for p in plan.pipelines] == \
+        ["scan_lineitem", "scan_orders", "join_agg"]
+    terminal = plan.pipelines[-1]
+    assert isinstance(terminal.output, CollectOutput)
+    # ONE fragment-local aggregate with the ORIGINAL fns — count stays a
+    # count (no partial/final split, no count->sum rewrite).
+    agg = terminal.ops[-1]
+    assert agg["op"] == "hash_agg"
+    assert ["n_lines", "count", "revenue"] in agg["aggs"]
+    assert sum(1 for op in terminal.ops if op["op"] == "hash_agg") == 1
+    # The relied-on property is recorded and matches the producer shuffle.
+    assert terminal.partitioning == {"key": "l_orderkey", "fanout": 8}
+    assert any("shuffle_elision" in r and "ELIDED" in r
+               for r in report.rules)
+
+
+def test_unelided_lowering_still_splits():
+    plan = optimizer.plan(_agg_after_join_query(), shuffle_elision=False)
+    assert [p.name for p in plan.pipelines] == \
+        ["scan_lineitem", "scan_orders", "join_agg", "final_agg"]
+    assert all(p.partitioning is None for p in plan.pipelines)
+
+
+def test_declared_tables_elide_every_shuffle():
+    """Pre-partitioned base tables + agg on the join key: the whole query
+    collapses to ONE pipeline with zero shuffle outputs — the build side
+    reads the table's stored partition slices directly."""
+    plan, report = optimizer.lower(_agg_after_join_query(partitioned=True))
+    assert len(plan.pipelines) == 1
+    pipe = plan.pipelines[0]
+    assert isinstance(pipe.input, TableInput)
+    assert isinstance(pipe.input2, TableInput)
+    assert pipe.fragments == 8
+    assert pipe.partitioning == {"key": "l_orderkey", "fanout": 8}
+    assert pipe.partitioning2 == {"key": "o_orderkey", "fanout": 8}
+    assert not any(isinstance(p.output, ShuffleOutput)
+                   for p in plan.pipelines)
+    assert sum("ELIDED" in r or "elided" in r for r in report.rules) >= 2
+
+
+def _bench_profile(tmp_path, mib_per_s: float = 100.0) -> str:
+    path = tmp_path / "BENCH_fake.json"
+    path.write_text(json.dumps(
+        {"pipeline": {"batch_mib": mib_per_s, "numpy_s": 1.0}}))
+    return str(path)
+
+
+def test_join_elision_continues_prepartitioned_final_agg(tmp_path):
+    """A final aggregate's output is partitioned by its combine key, so a
+    downstream join on that key continues in the final-agg fragments
+    (probe-side row shuffle elided) and the other side shuffles at the
+    SAME fan-out, ignoring the row-shuffle hint."""
+    bench = _bench_profile(tmp_path)            # 100 MiB/s measured
+    stats = optimizer.Stats({"a": 800.0 * MIB, "c": 25.0 * MIB})
+    q = (scan("a", ["k", "v"]).group_by("k").agg(sum_("v").alias("sv"))
+         .join(scan("c", ["kc", "vc"]), on=("k", "kc"))
+         .select("k", "sv", "vc")
+         .collect("agg_then_join", shuffle_partitions=4))
+    plan, report = optimizer.lower(q, stats=stats, bench_path=bench)
+    names = [p.name for p in plan.pipelines]
+    # No separate join pipeline: the final agg continued in place.
+    terminal = plan.pipelines[-1]
+    assert terminal.input2 is not None
+    assert any(op["op"] == "hash_join" for op in terminal.ops)
+    assert terminal.partitioning is not None
+    combine_parts = next(p.output.partitions for p in plan.pipelines
+                         if p.name == "scan_a")
+    build = next(p for p in plan.pipelines if p.name == "scan_c")
+    # Forced co-partitioning: the build fan-out matches the combine's,
+    # not the hint's 4.
+    assert build.output.partitions == combine_parts
+    assert terminal.partitioning["fanout"] == combine_parts
+    assert any("probe-side row shuffle" in r for r in report.rules), names
+    plan.validate()
+
+
+def test_join_elision_skipped_for_oversized_build_slices(tmp_path):
+    """The forced co-partitioning must not leave per-fragment build
+    slices far beyond the target partition size: a huge build side keeps
+    the size-based (unelided) plan, with the reason traced."""
+    bench = _bench_profile(tmp_path)            # 100 MiB/s: ~100 MiB budget
+    stats = optimizer.Stats({"a": 800.0 * MIB, "c": 4000.0 * MIB})
+    q = (scan("a", ["k", "v"]).group_by("k").agg(sum_("v").alias("sv"))
+         .join(scan("c", ["kc", "vc"]), on=("k", "kc"))
+         .select("k", "sv", "vc")
+         .collect("agg_then_huge_join", shuffle_partitions=4))
+    plan, report = optimizer.lower(q, stats=stats, bench_path=bench)
+    # The join stays a separate pipeline with its own co-partition
+    # shuffles and the usual size-based build choice.
+    join_pipe = next(p for p in plan.pipelines if p.input2 is not None)
+    assert join_pipe.partitioning is None
+    assert any("build slices per fragment" in r for r in report.rules)
+
+
+def test_elision_rule_always_visible_in_explain():
+    """Rules that fire without changing the pipeline count still emit
+    trace lines: q12's combine is NOT elidable (grouped by l_shipmode,
+    partitioned by l_orderkey) but explain shows the rule firing."""
+    from repro.engine import queries
+    text = explain.explain(queries.q12_logical())
+    assert "shuffle_elision" in text
+    assert "kept" in text
+    # And the plan itself is unchanged by the elision pass.
+    elided = optimizer.plan(queries.q12_logical())
+    plain = optimizer.plan(queries.q12_logical(), shuffle_elision=False)
+    assert elided.to_json() == plain.to_json()
+
+
+def test_elided_plan_json_roundtrip_preserves_partitioning():
+    plan = optimizer.plan(_agg_after_join_query(partitioned=True))
+    back = QueryPlan.from_json(plan.to_json())
+    back.validate()
+    assert back.pipelines[-1].partitioning == \
+        plan.pipelines[-1].partitioning
+    assert back.pipelines[-1].partitioning2 == \
+        plan.pipelines[-1].partitioning2
+    assert json.loads(back.to_json()) == json.loads(plan.to_json())
+
+
+# ---------------------------------------------------------------------------
+# validate() rules for elided stages
+# ---------------------------------------------------------------------------
+
+def _shuffle_pair(parts=4, parts2=None):
+    parts2 = parts if parts2 is None else parts2
+    return [
+        Pipeline("p1", TableInput("t", ["k", "v"]), [],
+                 ShuffleOutput("k", parts)),
+        Pipeline("p2", TableInput("u", ["rk", "rv"]), [],
+                 ShuffleOutput("rk", parts2)),
+    ]
+
+
+def test_validate_rejects_partitioning_mismatch():
+    pipes = _shuffle_pair(parts=4)
+    pipes.append(Pipeline(
+        "c", ShuffleInput("p1"),
+        [{"op": "hash_agg", "keys": ["k"], "aggs": [["s", "sum", "v"]]}],
+        CollectOutput(), partitioning={"key": "k", "fanout": 8}))
+    with pytest.raises(PlanValidationError, match="fan-out 8"):
+        QueryPlan("bad", [pipes[0], pipes[2]]).validate()
+    pipes[2].partitioning = {"key": "v", "fanout": 4}
+    with pytest.raises(PlanValidationError, match="does not match"):
+        QueryPlan("bad2", [pipes[0], pipes[2]]).validate()
+
+
+def test_validate_rejects_non_co_partitioned_join():
+    pipes = _shuffle_pair(parts=4, parts2=8)
+    pipes.append(Pipeline(
+        "j", ShuffleInput("p1"),
+        [{"op": "hash_join", "left_key": "k", "right_key": "rk"}],
+        CollectOutput(), input2=ShuffleInput("p2")))
+    with pytest.raises(PlanValidationError, match="not co-partitioned"):
+        QueryPlan("bad", pipes).validate()
+
+
+def test_validate_rejects_two_joins_per_pipeline():
+    pipes = _shuffle_pair()
+    pipes.append(Pipeline(
+        "j", ShuffleInput("p1"),
+        [{"op": "hash_join", "left_key": "k", "right_key": "rk"},
+         {"op": "hash_join", "left_key": "k", "right_key": "rk"}],
+        CollectOutput(), input2=ShuffleInput("p2")))
+    with pytest.raises(PlanValidationError, match="hash_join ops"):
+        QueryPlan("bad", pipes).validate()
+
+
+def test_validate_rejects_table_build_without_declared_layout():
+    plan = QueryPlan("bad", [Pipeline(
+        "j", TableInput("t", ["k", "v"]),
+        [{"op": "hash_join", "left_key": "k", "right_key": "rk"}],
+        CollectOutput(), input2=TableInput("u", ["rk", "rv"]))])
+    with pytest.raises(PlanValidationError, match="partitioning2"):
+        plan.validate()
+
+
+def test_validate_declared_table_partitioning_requires_pinned_fragments():
+    plan = QueryPlan("bad", [Pipeline(
+        "s", TableInput("t", ["k", "v"]),
+        [{"op": "hash_agg", "keys": ["k"], "aggs": [["s", "sum", "v"]]}],
+        CollectOutput(), partitioning={"key": "k", "fanout": 4})])
+    with pytest.raises(PlanValidationError, match="fragments=4"):
+        plan.validate()
+
+
+# ---------------------------------------------------------------------------
+# Runtime enforcement: the property is verified, not trusted
+# ---------------------------------------------------------------------------
+
+def test_worker_rejects_violated_partitioning_property():
+    store = ObjectStore()
+    rows = ColumnBatch({"k": np.arange(16, dtype=np.int64),
+                        "v": np.ones(16)})
+    store.put("in/part-0", columnar.serialize(rows))   # every k class
+    spec = worker.FragmentSpec(
+        query_id="q", pipeline="agg", fragment=1,
+        read_keys=["in/part-0"], read_keys2=[], columns=None,
+        ops=[{"op": "hash_agg", "keys": ["k"],
+              "aggs": [["s", "sum", "v"]]}],
+        output={"type": "collect"},
+        partitioning={"key": "k", "fanout": 4})
+    with pytest.raises(RuntimeError, match="violates the relied-on"):
+        worker.execute_fragment(store, spec)
+
+
+def test_worker_validates_float_partition_keys_too():
+    """A float-keyed declaration is verified under the partitioner's own
+    int64-truncation rule, not silently skipped."""
+    store = ObjectStore()
+    rows = ColumnBatch({"f": np.zeros(8, dtype=np.float64),
+                        "v": np.ones(8)})
+    store.put("in/part-0", columnar.serialize(rows))
+    spec = worker.FragmentSpec(
+        query_id="q", pipeline="agg", fragment=1,   # all keys -> part 0
+        read_keys=["in/part-0"], read_keys2=[], columns=None,
+        ops=[{"op": "hash_agg", "keys": ["f"],
+              "aggs": [["s", "sum", "v"]]}],
+        output={"type": "collect"},
+        partitioning={"key": "f", "fanout": 4})
+    with pytest.raises(RuntimeError, match="violates the relied-on"):
+        worker.execute_fragment(store, spec)
+
+
+def test_coordinator_rejects_misdeclared_table_layout():
+    """Tables stored row-partitioned but declared hash-partitioned fail
+    loudly (wrong object count at compile, wrong key values at run)."""
+    store = ObjectStore()
+    keys = datagen.load_table(store, "lineitem", 2000, 4)   # row-ranges
+    q = (scan("lineitem", ["l_orderkey", "l_quantity"],
+              partitioned_by=("l_orderkey", 8))
+         .group_by("l_orderkey").agg(sum_("l_quantity").alias("q"))
+         .collect("lying"))
+    c = Coordinator(store)
+    c.register_table("lineitem", keys)
+    plan = optimizer.plan(q)
+    with pytest.raises(ValueError, match="8 hash partitions"):
+        c.execute(plan, "lying-count")
+    # Right object count, still the wrong layout: the worker's value
+    # check catches it.
+    keys8 = datagen.load_table(store, "lineitem", 2000, 8, prefix="t8")
+    c8 = Coordinator(store)
+    c8.register_table("lineitem", keys8)
+    with pytest.raises(RuntimeError, match="violates the relied-on"):
+        c8.execute(plan, "lying-values")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end parity + the zero-shuffle-objects spy
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def elision_store():
+    store = ObjectStore()
+    n = 8
+    keys = {
+        "lineitem": datagen.load_table_hash_partitioned(
+            store, "lineitem", 20000, "l_orderkey", n),
+        "orders": datagen.load_table_hash_partitioned(
+            store, "orders", 5000, "o_orderkey", n),
+    }
+    return store, keys, n
+
+
+def _full(store, keys):
+    return ColumnBatch.concat(
+        [columnar.deserialize(store.get(k)) for k in keys])
+
+
+def _run(store, keys, q, backend, elide, qid):
+    c = Coordinator(store, backend=backend)
+    c.register_table("lineitem", keys["lineitem"])
+    c.register_table("orders", keys["orders"])
+    stats = optimizer.Stats.from_store(store, c.table_keys)
+    plan = optimizer.plan(q, stats=stats, backend=backend,
+                          shuffle_elision=elide)
+    return plan, c.execute(plan, qid)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jit"])
+@pytest.mark.parametrize("partitioned", [False, True])
+def test_elision_parity_both_backends(elision_store, backend, partitioned):
+    """Elided plans match the unelided plans AND the pure-numpy reference
+    on both backends; elided stages write zero shuffle objects."""
+    store, keys, n = elision_store
+    rtol = 1e-9 if backend == "numpy" else 1e-6
+    ref = _reference(_full(store, keys["lineitem"]),
+                     _full(store, keys["orders"]))
+    q = _agg_after_join_query(partitioned=partitioned, n=n)
+    results = {}
+    for elide in (True, False):
+        qid = f"par-{backend}-{partitioned}-{elide}"
+        plan, res = _run(store, keys, q, backend, elide, qid)
+        got = {int(k): (s, int(c)) for k, s, c in zip(
+            res.result["l_orderkey"].tolist(),
+            res.result["revenue"].tolist(),
+            res.result["n_lines"].tolist())}
+        results[elide] = got
+        assert set(got) == set(ref)
+        for k in ref:
+            assert got[k][0] == pytest.approx(ref[k][0], rel=rtol)
+            assert got[k][1] == ref[k][1]
+        shuffle_objs = store.list(f"shuffle/{qid}/")
+        if elide and partitioned:
+            # Spy: EVERY shuffle was elided — not one object written.
+            assert shuffle_objs == []
+        elif elide:
+            # The combine shuffle was elided: the collapsed join_agg
+            # pipeline writes no shuffle objects (only the scans do).
+            assert [k for k in shuffle_objs if "/join_agg/" in k] == []
+        else:
+            assert [k for k in shuffle_objs if "/join_agg/" in k] != []
+    assert set(results[True]) == set(results[False])
+    for k in results[True]:
+        assert results[True][k][0] == pytest.approx(
+            results[False][k][0], rel=rtol)
+
+
+def test_collapsed_agg_collect_path_matches_interpreted():
+    """run_pipeline_collect fuses a trailing collapsed hash_agg with its
+    preceding join segment on jit; results match the interpreted ops."""
+    r = np.random.default_rng(7)
+    probe = ColumnBatch({
+        "k": r.integers(0, 500, 4000).astype(np.int64),
+        "x": r.uniform(0.0, 10.0, 4000),
+    })
+    build = ColumnBatch({
+        "bk": np.arange(500, dtype=np.int64),
+        "w": r.uniform(0.0, 1.0, 500),
+    })
+    ops = [
+        {"op": "hash_join", "left_key": "k", "right_key": "bk",
+         "build": build},
+        {"op": "filter", "expr": ["lt", "x", 8.0]},
+        {"op": "project", "columns": [
+            "k", ["xw", ["mul", "x", "w"]]]},
+        {"op": "hash_agg", "keys": ["k"],
+         "aggs": [["s", "sum", "xw"], ["c", "count", "xw"]]},
+    ]
+    out_np = engine_compile.run_pipeline_collect(probe, ops,
+                                                 backend="numpy")
+    out_jit = engine_compile.run_pipeline_collect(probe, ops,
+                                                  backend="jit")
+    assert out_np.num_rows == out_jit.num_rows
+    o_np = np.argsort(out_np["k"])
+    o_jit = np.argsort(out_jit["k"])
+    np.testing.assert_array_equal(out_np["k"][o_np], out_jit["k"][o_jit])
+    np.testing.assert_allclose(out_np["s"][o_np], out_jit["s"][o_jit],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(out_np["c"][o_np], out_jit["c"][o_jit])
+
+
+# ---------------------------------------------------------------------------
+# Width-aware size estimates (Stats.column_widths)
+# ---------------------------------------------------------------------------
+
+def test_stats_from_store_peeks_column_widths():
+    store = ObjectStore()
+    keys = datagen.load_table(store, "lineitem", 500, 2)
+    stats = optimizer.Stats.from_store(store, {"lineitem": keys})
+    w = stats.widths_for("lineitem")
+    assert w["l_returnflag"] == 1 and w["l_shipdate"] == 4
+    assert w["l_extendedprice"] == 8
+
+
+def test_scan_estimate_scales_by_column_width(tmp_path):
+    """Scanning one narrow int8 column of a mostly-f64 table must
+    estimate far fewer bytes than the flat column-count model — and
+    therefore fan out fewer shuffle partitions."""
+    widths = {"t": {"a": 1, "b": 8, "c": 8, "d": 8}}
+    table_bytes = {"t": 1000.0 * MIB}
+    bench = tmp_path / "BENCH_fake.json"        # 100 MiB/s measured
+    bench.write_text(json.dumps(
+        {"pipeline": {"batch_mib": 100.0, "numpy_s": 1.0}}))
+    bench = str(bench)
+    q = (scan("t", ["a"]).select("a", (col("a") * 2.0).alias("a2"))
+         .group_by("a").agg(sum_("a2").alias("s"))
+         .collect("narrow"))
+    wide_stats = optimizer.Stats(dict(table_bytes))
+    narrow_stats = optimizer.Stats(dict(table_bytes), dict(widths))
+    p_wide = optimizer.plan(q, stats=wide_stats, bench_path=bench)
+    p_narrow = optimizer.plan(q, stats=narrow_stats, bench_path=bench)
+    wide_parts = p_wide.pipelines[0].output.partitions
+    narrow_parts = p_narrow.pipelines[0].output.partitions
+    assert narrow_parts < wide_parts
+
+
+def test_build_side_choice_uses_column_widths():
+    """Equal table bytes, but the probe-authored LEFT side only scans a
+    thin slice of a mostly-wide table: only the width-aware estimate
+    sees it as the smaller input and swaps it to the build side — the
+    width-blind lowering ties and keeps the authored (right) build."""
+    table_bytes = {"narrow": 100.0 * MIB, "fat": 100.0 * MIB}
+    # "narrow" stores 64 B/row but the query reads only the 8-byte key:
+    # width-aware scan estimate = 100 MiB * 8/64 = 12.5 MiB.
+    widths = {"narrow": {"k": 8, "pad": 56}, "fat": {"rk": 8, "v": 8}}
+    q = (scan("narrow", ["k"])
+         .join(scan("fat", ["rk", "v"]), on=("k", "rk"))
+         .select("k", "v")
+         .collect("widths", shuffle_partitions=4))
+    aware = optimizer.plan(q, stats=optimizer.Stats(dict(table_bytes),
+                                                    widths))
+    aware_join = next(p for p in aware.pipelines if p.input2 is not None)
+    assert aware_join.input2.from_pipeline == "scan_narrow"
+    blind = optimizer.plan(q, stats=optimizer.Stats(dict(table_bytes)))
+    blind_join = next(p for p in blind.pipelines if p.input2 is not None)
+    assert blind_join.input2.from_pipeline == "scan_fat"
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: pre-partitioned inputs never change results
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    _keys_st = st.lists(st.integers(0, 63), min_size=1, max_size=200)
+    _fanout_st = st.integers(1, 8)
+else:
+    _keys_st = _fanout_st = None
+
+
+@given(keys=_keys_st, fanout=_fanout_st)
+@settings(max_examples=40, deadline=None)
+def test_partitioned_local_agg_equals_global_agg(keys, fanout):
+    """The elision invariant itself: radix-partition any batch by the
+    group key, aggregate each slice fully, concatenate — identical to
+    aggregating the whole batch (groups are partition-disjoint)."""
+    rng = np.random.default_rng(len(keys) * 31 + fanout)
+    batch = ColumnBatch({
+        "k": np.asarray(keys, dtype=np.int64),
+        "v": rng.uniform(-10.0, 10.0, len(keys)),
+    })
+    aggs = [["s", "sum", "v"], ["c", "count", "v"],
+            ["lo", "min", "v"], ["hi", "max", "v"]]
+    whole = operators.op_hash_agg(batch, ["k"], aggs)
+    parts = [operators.op_hash_agg(p, ["k"], aggs)
+             for p in operators.radix_partition(batch, "k", fanout)
+             if p.num_rows]
+    merged = ColumnBatch.concat(parts)
+    assert merged.num_rows == whole.num_rows
+    ow, om = np.argsort(whole["k"]), np.argsort(merged["k"])
+    np.testing.assert_array_equal(whole["k"][ow], merged["k"][om])
+    for name in ("s", "lo", "hi"):
+        np.testing.assert_allclose(whole[name][ow], merged[name][om],
+                                   rtol=1e-12)
+    np.testing.assert_array_equal(whole["c"][ow], merged["c"][om])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_prepartitioned_e2e_parity(seed):
+    """Randomized end-to-end: random tables stored hash-partitioned,
+    elided vs unelided plans agree exactly on the numpy backend."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 7))
+    store = ObjectStore()
+    li = ColumnBatch({
+        "l_orderkey": rng.integers(0, 200, 3000).astype(np.int64),
+        "l_extendedprice": np.round(rng.uniform(1.0, 100.0, 3000), 2),
+        "l_discount": np.round(rng.integers(0, 11, 3000) * 0.01, 2),
+    })
+    orders = ColumnBatch({
+        "o_orderkey": rng.permutation(np.arange(250)).astype(np.int64),
+        "o_totalprice": np.round(rng.uniform(1.0, 500.0, 250), 2),
+    })
+    keys = {"lineitem": [], "orders": []}
+    for name, batch, key in (("lineitem", li, "l_orderkey"),
+                             ("orders", orders, "o_orderkey")):
+        for p, part in enumerate(operators.radix_partition(batch, key, n)):
+            k = f"tables/{name}/hashpart-{p:05d}"
+            store.put(k, columnar.serialize(part))
+            keys[name].append(k)
+    q = _agg_after_join_query(partitioned=True, n=n,
+                              name=f"rand-{seed}")
+    out = {}
+    for elide in (True, False):
+        _, res = _run(store, keys, q, "numpy", elide,
+                      f"rand-{seed}-{elide}")
+        out[elide] = {int(k): (s, int(c)) for k, s, c in zip(
+            res.result["l_orderkey"].tolist(),
+            res.result["revenue"].tolist(),
+            res.result["n_lines"].tolist())}
+    assert out[True] == out[False]
