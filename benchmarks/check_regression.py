@@ -102,6 +102,19 @@ def check(current: dict, baseline: dict | None, tolerance: float,
             f"planning.overhead_frac: {frac:.4f} > "
             f"{PLANNING_OVERHEAD_MAX} — logical->physical lowering costs "
             "more than 1% of a Q12 run")
+    serving = current.get("concurrent_serving", {})
+    rate = serving.get("plan_cache_hit_rate")
+    n = serving.get("n_queries")
+    if rate is not None and n:
+        # N same-shape queries on a fresh cache: the first misses, every
+        # follower must hit — anything below (N-1)/N means shape-
+        # compatible queries stopped sharing compiled traces.
+        floor = (n - 1) / n
+        if rate < floor:
+            failures.append(
+                f"concurrent_serving.plan_cache_hit_rate: {rate:.3f} < "
+                f"{floor:.3f} — same-shape queries are missing the "
+                "compiled-plan cache")
     return failures
 
 
@@ -145,6 +158,9 @@ def main(argv=None) -> int:
     if frac is not None:
         print(f"  planning.overhead_frac: {frac:.5f} "
               f"(max {PLANNING_OVERHEAD_MAX})")
+    rate = current.get("concurrent_serving", {}).get("plan_cache_hit_rate")
+    if rate is not None:
+        print(f"  concurrent_serving.plan_cache_hit_rate: {rate:.3f}")
     if failures:
         print("\nREGRESSIONS:")
         for f in failures:

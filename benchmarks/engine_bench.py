@@ -526,8 +526,103 @@ def bench_shuffle_elision() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 9) multi-query serving: interleaved shared-pool execution + compiled-plan
+#    cache vs serial execution of the same query stream
+# ---------------------------------------------------------------------------
+
+SERVING_N_QUERIES = 8
+SERVING_BUDGET = 16          # fixed shared worker budget
+SERVING_ROWS = 60_000
+SERVING_PARTS = 12
+
+
+def bench_concurrent_serving() -> dict:
+    """N same-shape Q12 queries (different year literals) served on one
+    shared elastic pool at a fixed worker budget, interleaved vs serial.
+
+    The throughput comparison is in MODEL time (deterministic per seed —
+    the same serverless execution model the shuffle_elision bench
+    gates); the compiled-plan cache hit rate is measured on a fresh
+    cache, so the first query misses and the N-1 same-shape followers
+    hit — wall times are recorded alongside to show the retrace savings.
+    """
+    from repro.core.storage_service import ObjectStore
+    from repro.engine import datagen
+    from repro.serve.query_server import QueryRequest, QueryServer
+
+    store = ObjectStore()
+    tables = {
+        "lineitem": datagen.load_table(store, "lineitem", SERVING_ROWS,
+                                       SERVING_PARTS),
+        "orders": datagen.load_table(store, "orders", SERVING_ROWS // 4,
+                                     SERVING_PARTS // 2),
+    }
+    base = datagen.DATE_1994_01_01
+
+    def requests():
+        # Same plan SHAPE, different filter literals, two tenants.
+        return [QueryRequest(queries.q12_logical(year_lo=base + 30 * i),
+                             tenant=f"tenant{i % 2}")
+                for i in range(SERVING_N_QUERIES)]
+
+    def make_server():
+        srv = QueryServer(store, worker_budget=SERVING_BUDGET, rng_seed=0)
+        for t, keys in tables.items():
+            srv.register_table(t, keys)
+        return srv
+
+    # Serial baseline first: same machinery, one query at a time. This
+    # run also cold-compiles the jit traces.
+    engine_compile.PLAN_CACHE.clear()
+    t0 = time.perf_counter()
+    serial = make_server().serve(requests(), interleave=False)
+    serial_wall = time.perf_counter() - t0
+    # Fresh plan cache so the interleaved run records the honest
+    # first-query-miss hit rate; traces stay warm (wall time shows it).
+    engine_compile.PLAN_CACHE.clear()
+    t0 = time.perf_counter()
+    inter = make_server().serve(requests())
+    inter_wall = time.perf_counter() - t0
+
+    assert all(s.result.result.num_rows > 0 for s in inter.queries)
+    out = {
+        "n_queries": SERVING_N_QUERIES, "worker_budget": SERVING_BUDGET,
+        "rows": SERVING_ROWS,
+        "serial_makespan_s": serial.makespan_s,
+        "serial_throughput_qps": serial.throughput_qps,
+        "serial_p50_latency_s": serial.p50_latency_s,
+        "serial_p99_latency_s": serial.p99_latency_s,
+        "interleaved_makespan_s": inter.makespan_s,
+        "interleaved_throughput_qps": inter.throughput_qps,
+        "p50_latency_s": inter.p50_latency_s,
+        "p99_latency_s": inter.p99_latency_s,
+        "plan_cache_hits": inter.plan_cache_hits,
+        "plan_cache_misses": inter.plan_cache_misses,
+        "plan_cache_hit_rate": inter.plan_cache_hit_rate,
+        "serial_wall_s": serial_wall,
+        "interleaved_wall_s": inter_wall,
+        "admission": inter.admission,
+        "speedup": inter.throughput_qps / serial.throughput_qps,
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
+
+SECTIONS = {
+    "pipeline": bench_pipeline,
+    "join_pipeline": bench_join_pipeline,
+    "dup_key_join": bench_dup_key_join,
+    "partition_fusion": bench_partition_fusion,
+    "shuffle_elision": bench_shuffle_elision,
+    "serde": bench_serde,
+    "shuffle": bench_shuffle,
+    "planning": bench_planning,
+    "concurrent_serving": bench_concurrent_serving,
+}
+
 
 def run_all() -> dict:
     # Pipeline benches first: they are the most allocation-sensitive
@@ -541,6 +636,7 @@ def run_all() -> dict:
             "serde": bench_serde(),
             "shuffle": bench_shuffle(),
             "planning": bench_planning(),
+            "concurrent_serving": bench_concurrent_serving(),
             "config": {"serde_rows": SERDE_ROWS,
                        "shuffle_rows": SHUFFLE_ROWS,
                        "shuffle_partitions": SHUFFLE_PARTITIONS,
@@ -556,6 +652,9 @@ def run_all() -> dict:
                        "elision_rows": ELISION_ROWS,
                        "elision_orders": ELISION_ORDERS,
                        "elision_partitions": ELISION_PARTITIONS,
+                       "serving_n_queries": SERVING_N_QUERIES,
+                       "serving_budget": SERVING_BUDGET,
+                       "serving_rows": SERVING_ROWS,
                        "repeats": REPEATS}}
 
 
@@ -566,7 +665,11 @@ def engine_data_plane():
     jp, pl = results["join_pipeline"], results["planning"]
     dk, pf = results["dup_key_join"], results["partition_fusion"]
     se = results["shuffle_elision"]
+    cs = results["concurrent_serving"]
     return [
+        ("engine/concurrent_serving_speedup", 0.0, cs["speedup"]),
+        ("engine/concurrent_serving_hit_rate", 0.0,
+         cs["plan_cache_hit_rate"]),
         ("engine/shuffle_elision_speedup", 0.0, se["speedup"]),
         ("engine/shuffle_elision_cost_ratio", 0.0, se["cost_ratio"]),
         ("engine/dup_key_join_speedup", 0.0, dk["speedup"]),
@@ -608,6 +711,14 @@ EXPECT = {
     # seed — see bench_shuffle_elision).
     "engine/shuffle_elision_speedup": (1.5, 1000.0),
     "engine/shuffle_elision_cost_ratio": (1.0, 1000.0),
+    # ISSUE 6 acceptance: interleaving N=8 same-shape queries on one
+    # shared pool at a fixed worker budget must beat serial execution by
+    # >= 1.5x modeled throughput (deterministic per seed), and the
+    # compiled-plan cache must hit on every same-shape follower
+    # (>= (N-1)/N on a fresh cache).
+    "engine/concurrent_serving_speedup": (1.5, 1000.0),
+    "engine/concurrent_serving_hit_rate": ((SERVING_N_QUERIES - 1)
+                                           / SERVING_N_QUERIES, 1.0),
     # Logical->physical lowering must cost < 1% of a Q12 run.
     "engine/planning_overhead_frac": (0.0, 0.01),
 }
@@ -615,9 +726,30 @@ EXPECT = {
 ALL = [engine_data_plane]
 
 
-def main() -> None:
-    results = run_all()
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Engine data-plane benchmarks -> BENCH_engine.json")
+    ap.add_argument("--sections", default=None, metavar="NAME[,NAME...]",
+                    help="run only the named sections (comma-separated; "
+                         f"available: {','.join(sorted(SECTIONS))}) and "
+                         "merge them into the existing BENCH_engine.json "
+                         "— lets CI run the slower sections standalone")
+    args = ap.parse_args(argv)
+
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+    if args.sections:
+        names = [s for s in args.sections.split(",") if s]
+        unknown = sorted(set(names) - set(SECTIONS))
+        if unknown:
+            raise SystemExit(f"unknown sections: {', '.join(unknown)} "
+                             f"(available: {', '.join(sorted(SECTIONS))})")
+        results = json.loads(out.read_text()) if out.exists() else {}
+        for name in names:
+            results[name] = SECTIONS[name]()
+    else:
+        results = run_all()
     out.write_text(json.dumps(results, indent=2) + "\n")
     print(json.dumps(results, indent=2))
     print(f"wrote {out}")

@@ -68,6 +68,14 @@ def cpu_bytes_per_s(backend: str, fallback: float,
     return float(mib) * MIB / float(secs)
 
 
+def section(name: str, path: Optional[str] = None) -> dict:
+    """One benchmark section as a dict (``{}`` when absent/malformed).
+    The serving layer reads ``concurrent_serving`` through this to
+    report the last recorded throughput/hit-rate alongside live runs."""
+    sec = load(path).get(name, {})
+    return sec if isinstance(sec, dict) else {}
+
+
 def shuffle_bytes_per_s(fallback: float,
                         path: Optional[str] = None) -> float:
     """Measured radix partition+serialize throughput (bytes/s)."""

@@ -76,7 +76,7 @@ class ElasticPool:
         self._started_since_anchor = 0
         self._rng = np.random.default_rng(rng_seed)
         self.stats = {"cold_starts": 0, "warm_starts": 0, "invocations": 0,
-                      "worker_seconds": 0.0}
+                      "worker_seconds": 0.0, "peak_warm": 0, "expired": 0}
 
     # -- acquisition ---------------------------------------------------------
     def acquire(self, n: int, t: float) -> list[Worker]:
@@ -123,6 +123,10 @@ class ElasticPool:
             w.last_used = t
             self.stats["worker_seconds"] += busy_s
             self._warm.append(w)
+        # Fleet high-water mark: scale-up is visible as peak_warm growth,
+        # scale-down as the expired counter (idle lifetime reclaim).
+        self.stats["peak_warm"] = max(self.stats["peak_warm"],
+                                      len(self._warm))
 
     # -- internals -----------------------------------------------------------
     def _scaling_delay(self, t: float) -> float:
@@ -140,6 +144,7 @@ class ElasticPool:
     def _expire_idle(self, t: float) -> None:
         keep = [w for w in self._warm
                 if t - w.last_used <= self.limits.idle_lifetime_s]
+        self.stats["expired"] += len(self._warm) - len(keep)
         self._warm = keep
 
     def warm_count(self) -> int:

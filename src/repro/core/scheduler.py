@@ -9,6 +9,7 @@ elastic trainer's stage execution (data prep / step / checkpoint stages).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -91,6 +92,12 @@ class StageScheduler:
         return done
 
     # -- single stage ---------------------------------------------------------
+    def run_stage(self, stage: Stage, t: float) -> StageResult:
+        """Acquire workers at model time ``t``, execute the stage's
+        fragments (real work, modeled durations), release. Public entry
+        for schedulers that interleave stages from many DAGs."""
+        return self._run_stage(stage, t)
+
     def _run_stage(self, stage: Stage, t: float) -> StageResult:
         n = len(stage.fragments)
         workers = self.pool.acquire(n, t)
@@ -132,6 +139,120 @@ class StageScheduler:
             noise *= float(self._rng.uniform(
                 self.policy.slowdown_factor, 3 * self.policy.slowdown_factor))
         return est * noise
+
+
+# ---------------------------------------------------------------------------
+# Multi-query scheduling (serving layer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QueryJob:
+    """One query's stage DAG as the multi-query scheduler sees it."""
+
+    job_id: str
+    stages: list[Stage]
+    submit_t: float = 0.0
+    tenant: str = "default"
+    cost: int = 0                       # admission cost (worker invocations)
+    results: dict[str, StageResult] = dataclasses.field(default_factory=dict)
+    started: set = dataclasses.field(default_factory=set)
+    admit_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.cost:
+            self.cost = sum(len(s.fragments) for s in self.stages)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_t is not None
+
+
+class MultiQueryScheduler(StageScheduler):
+    """Interleaves ready stages from MANY query DAGs onto one shared pool.
+
+    Unlike ``StageScheduler.run`` (one DAG, stages started as their deps
+    complete), this is an event loop over a heap of running stages: at
+    each model-time step every admitted job's ready stages are dispatched
+    FIFO while they fit the worker ``budget`` (a stage wider than the
+    whole budget runs alone rather than starving), then time advances to
+    the next stage completion or query arrival. Queries denied by the
+    ``admitter`` (per-tenant admission control) queue and are re-offered
+    as capacity frees. Same noise model and pool accounting as the
+    single-query scheduler; deterministic per seed.
+    """
+
+    def __init__(self, pool, policy: StragglerPolicy = StragglerPolicy(),
+                 budget: int = 64, straggler_prob: float = 0.02,
+                 rng_seed: int = 0):
+        super().__init__(pool, policy, straggler_prob, rng_seed)
+        self.budget = budget
+
+    def run_jobs(self, jobs: Sequence[QueryJob], admitter=None
+                 ) -> list[QueryJob]:
+        pending = sorted(jobs, key=lambda j: (j.submit_t, j.job_id))
+        admitted: list[QueryJob] = []
+        running: list = []              # heap: (end_t, seq, width, job, res)
+        seq = used = done = 0
+        t = pending[0].submit_t if pending else 0.0
+        while done < len(jobs):
+            progressed = False
+            # 1. offer arrived jobs to admission control, in submit order
+            waiting = []
+            for job in pending:
+                if job.submit_t <= t and (admitter is None
+                                          or admitter.try_admit(job, t)):
+                    job.admit_t = t
+                    admitted.append(job)
+                    progressed = True
+                else:
+                    waiting.append(job)
+            pending = waiting
+            # 2. dispatch ready stages FIFO while they fit the budget
+            for job in admitted:
+                if job.done:
+                    continue
+                for stage in job.stages:
+                    if stage.name in job.started or \
+                            not all(d in job.results for d in stage.deps):
+                        continue
+                    width = len(stage.fragments)
+                    if used and used + width > self.budget:
+                        continue
+                    # Deps recorded in job.results completed at <= t and
+                    # admit_t <= t, so the stage starts exactly at t.
+                    res = self.run_stage(stage, t)
+                    job.started.add(stage.name)
+                    used += width
+                    heapq.heappush(running, (res.end_t, seq, width, job,
+                                             res))
+                    seq += 1
+                    progressed = True
+            if progressed:
+                continue
+            # 3. stalled: advance model time to the next event
+            events = [running[0][0]] if running else []
+            for job in pending:
+                if job.submit_t > t:
+                    events.append(job.submit_t)
+                elif admitter is not None:
+                    # Queued behind admission control: wake when the
+                    # tenant's bucket has refilled enough.
+                    events.append(max(admitter.next_admit_time(job, t),
+                                      t + 1e-6))
+            if not events or (not running and min(events) <= t):
+                raise RuntimeError(
+                    "multi-query scheduler stalled: queued jobs but no "
+                    "running stages or future events")
+            t = min(events)
+            while running and running[0][0] <= t:
+                end_t, _, width, job, res = heapq.heappop(running)
+                used -= width
+                job.results[res.name] = res
+                if len(job.results) == len(job.stages):
+                    job.finish_t = end_t
+                    done += 1
+        return list(jobs)
 
 
 def make_pool(mode: str, provisioned_slots: int = 256, **kw):

@@ -216,6 +216,8 @@ class ObjectStore:
     def __init__(self, partition_model: Optional[PartitionModel] = None,
                  clock: Optional[Callable[[], float]] = None):
         self._objects: dict[str, bytes] = {}
+        self._etags: dict[str, int] = {}
+        self._put_seq = 0
         self._lock = threading.Lock()
         self.stats = RequestStats()
         self.partitions = partition_model
@@ -226,8 +228,20 @@ class ObjectStore:
         self._admit(key, write=True, nbytes=len(data))
         with self._lock:
             self._objects[key] = bytes(data)
+            self._put_seq += 1
+            self._etags[key] = self._put_seq
             self.stats.writes += 1
             self.stats.write_bytes += len(data)
+
+    def etag(self, key: str) -> int:
+        """Monotonic per-store version of the object at ``key`` (S3 ETag
+        analog): changes on every overwrite, so caches can validate that
+        an input is byte-identical without re-reading it. Raises KeyError
+        for missing objects."""
+        with self._lock:
+            if key not in self._etags:
+                raise KeyError(key)
+            return self._etags[key]
 
     def get(self, key: str, byte_range: Optional[tuple[int, int]] = None) -> bytes:
         with self._lock:
@@ -255,6 +269,7 @@ class ObjectStore:
     def delete(self, key: str) -> None:
         with self._lock:
             self._objects.pop(key, None)
+            self._etags.pop(key, None)
             self.stats.deletes += 1
 
     def size(self, key: str) -> int:

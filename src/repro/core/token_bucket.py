@@ -181,3 +181,70 @@ def plan_transfer(total_bytes: float, workers: int,
         "expected_bw": effective_throughput(per_worker, config),
         "min_workers_for_burst": total_bytes / budget,
     }
+
+
+# ---------------------------------------------------------------------------
+# Admission control (serving layer)
+# ---------------------------------------------------------------------------
+#
+# The network buckets above model bandwidth; the serving layer reuses the
+# same token-bucket mechanism for per-tenant ADMISSION control: each
+# tenant holds a budget of worker invocations (a query's cost = its total
+# fragment count) that refills continuously, so one tenant saturating its
+# bucket queues its own queries without starving another tenant's.
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Per-tenant invocation budget: ``capacity`` tokens burst, refilling
+    at ``refill_per_s`` tokens per model-time second."""
+
+    capacity: float = 256.0
+    refill_per_s: float = 8.0
+
+
+class AdmissionBucket:
+    """Continuous-refill token bucket over worker invocations.
+
+    Deterministic and clocked in model time (the caller passes ``t``), so
+    the serving event loop can compute exactly when a queued query becomes
+    admissible (``time_until``) instead of polling."""
+
+    def __init__(self, config: AdmissionConfig = AdmissionConfig()):
+        self.config = config
+        self._tokens = float(config.capacity)
+        self._t = 0.0
+        self.admitted = 0
+        self.denied = 0
+
+    def _advance(self, t: float) -> None:
+        if t > self._t:
+            self._tokens = min(
+                self.config.capacity,
+                self._tokens + (t - self._t) * self.config.refill_per_s)
+            self._t = t
+
+    def tokens_at(self, t: float) -> float:
+        self._advance(t)
+        return self._tokens
+
+    def try_acquire(self, n: float, t: float) -> bool:
+        """Take ``n`` tokens at model time ``t``; consumes only on
+        success. Costs above ``capacity`` clamp to the full bucket —
+        an over-wide query admits when the bucket is full rather than
+        never."""
+        self._advance(t)
+        n = min(float(n), self.config.capacity)
+        if self._tokens >= n:
+            self._tokens -= n
+            self.admitted += 1
+            return True
+        self.denied += 1
+        return False
+
+    def time_until(self, n: float, t: float) -> float:
+        """Model-time delay until ``n`` tokens are available (0 if now)."""
+        self._advance(t)
+        n = min(float(n), self.config.capacity)
+        if self._tokens >= n:
+            return 0.0
+        return (n - self._tokens) / self.config.refill_per_s

@@ -74,6 +74,7 @@ follow-up (local x64).
 """
 from __future__ import annotations
 
+import collections
 import functools
 import json
 import warnings
@@ -84,6 +85,7 @@ import numpy as np
 
 from repro.engine import logical as engine_logical
 from repro.engine import operators
+from repro.engine import plans as engine_plans
 from repro.engine.columnar import ColumnBatch
 from repro.kernels import hash_join as hj_kernel
 from repro.kernels.segment_reduce import segment_reduce
@@ -136,6 +138,80 @@ def _value_consts(expr, out: list):
 
 
 # ---------------------------------------------------------------------------
+# Canonical literals (the compiled-plan cache boundary)
+# ---------------------------------------------------------------------------
+#
+# Segments and tails compile from CANONICAL op specs
+# (``plans.canonicalize_ops``): literal values are replaced by positional
+# ``[plans.LIT, i, tag]`` placeholders and arrive per call as a separate
+# binding, so the module-level trace caches key on plan SHAPE — two
+# queries that differ only in filter constants / projection coefficients
+# / in-list values (same length, same dtype class) fetch the same
+# compiled object AND reuse its XLA traces. Inside a jit trace the
+# binding is a tuple of fixed-dtype scalars/arrays (jit specializes on
+# dtype+shape, not value); on interpreted fallbacks and host-side const
+# evaluation it is the original Python values (numpy dtype semantics
+# preserved, e.g. ``np.full`` of a Python float stays float64).
+
+def _subst(node, vals):
+    """Re-bind placeholder nodes to concrete values: original literals
+    for interpreted/host evaluation, traced values inside a trace."""
+    if isinstance(node, (list, tuple)):
+        if len(node) == 3 and node[0] == engine_plans.LIT:
+            return vals[node[1]]
+        return [_subst(x, vals) for x in node]
+    return node
+
+
+def _lit_indices(node, out: set) -> set:
+    if isinstance(node, (list, tuple)):
+        if len(node) == 3 and node[0] == engine_plans.LIT:
+            out.add(node[1])
+        else:
+            for x in node:
+                _lit_indices(x, out)
+    return out
+
+
+def _flat_lits(vals) -> list:
+    """Scalar view of literal values (list literals flatten) for the
+    wide-int guards."""
+    out: list = []
+    for v in vals:
+        if isinstance(v, list):
+            out.extend(v)
+        else:
+            out.append(v)
+    return out
+
+
+def _narrow_lits(lits) -> tuple:
+    """The traced literal binding: fixed dtypes (bool / int32 / float32,
+    matching what x64-off narrowing did to the formerly baked constants)
+    so every shape-compatible binding hits the same trace. Integers
+    beyond int32 widen to int64 — the stage that actually references a
+    wide literal has already diverted to its interpreted path, and an
+    int64 scalar in an unused argument slot only costs a one-off trace."""
+    out = []
+    for v in lits:
+        if isinstance(v, list):
+            a = np.asarray(v)
+            if a.dtype.kind == "f":
+                a = a.astype(np.float32)
+            elif a.dtype.kind in "iu" and not _any_wide_int(v):
+                a = a.astype(np.int32)
+            out.append(a)
+        elif isinstance(v, bool):
+            out.append(np.bool_(v))
+        elif isinstance(v, int):
+            out.append(np.int64(v) if not _INT32_MIN <= v <= _INT32_MAX
+                       else np.int32(v))
+        else:
+            out.append(np.float32(v))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # Fused filter/project segments
 # ---------------------------------------------------------------------------
 #
@@ -171,35 +247,37 @@ def _bounded_shape(cols: dict, n: int, seen: set):
 
 class _MaskStage:
     def __init__(self, exprs: list):
-        self.exprs = exprs
+        self.exprs = exprs                   # canonical (placeholder) form
         self.refs = sorted(set().union(
             *[_expr_refs(e, set()) for e in exprs]))
-        self._wide_consts = _any_wide_int(
-            sum((_expr_consts(e, []) for e in exprs), []))
+        self._lit_idx = sorted(_lit_indices(exprs, set()))
         self._seen: set = set()
 
         @jax.jit
-        def mask_fn(cols):
-            m = operators.eval_expr(exprs[0], cols, xp=jnp)
-            for e in exprs[1:]:
+        def mask_fn(cols, lits):
+            bound = [_subst(e, lits) for e in exprs]
+            m = operators.eval_expr(bound[0], cols, xp=jnp)
+            for e in bound[1:]:
                 m = m & operators.eval_expr(e, cols, xp=jnp)
             return m
 
         self._fn = mask_fn
 
-    def run(self, env: dict) -> dict:
-        if self._wide_consts or \
+    def run(self, env: dict, lits: list = ()) -> dict:
+        own = _flat_lits([lits[i] for i in self._lit_idx])
+        if _any_wide_int(own) or \
                 any(_overflows_int32(env[k]) for k in self.refs):
             # int32 narrowing would flip the comparison: evaluate the
-            # predicates interpreted instead.
-            mask = operators.eval_expr(self.exprs[0], env)
-            for e in self.exprs[1:]:
+            # predicates interpreted instead (original literal values).
+            bound = [_subst(e, lits) for e in self.exprs]
+            mask = operators.eval_expr(bound[0], env)
+            for e in bound[1:]:
                 mask = mask & operators.eval_expr(e, env)
         else:
             n = len(next(iter(env.values())))
             cols, _ = _bounded_shape({k: env[k] for k in self.refs}, n,
                                      self._seen)
-            mask = np.asarray(self._fn(cols))[:n]
+            mask = np.asarray(self._fn(cols, _narrow_lits(lits)))[:n]
         idx = np.flatnonzero(mask)
         return {k: v[idx] for k, v in env.items()}
 
@@ -220,7 +298,7 @@ def _int_valued(expr, env: dict) -> bool:
 
 class _ProjectStage:
     def __init__(self, columns: list):
-        self.columns = columns
+        self.columns = columns               # canonical (placeholder) form
         self.passthrough = [c for c in columns if isinstance(c, str)]
         derived = [(c[0], c[1]) for c in columns if not isinstance(c, str)]
         self.consts = [(name, expr) for name, expr in derived
@@ -230,48 +308,57 @@ class _ProjectStage:
         self.refs = sorted(set().union(
             set(), *[_value_refs(e, set()) for _, e in self.computed]))
         self.order = [c if isinstance(c, str) else c[0] for c in columns]
-        self._wide_consts = _any_wide_int(
-            sum((_value_consts(e, []) for _, e in self.computed), []))
+        self._lit_idx = sorted(_lit_indices(
+            [e for _, e in self.computed], set()))
         self._seen: set = set()
 
         computed = self.computed
 
         @jax.jit
-        def project_fn(cols):
+        def project_fn(cols, lits):
             n = next(iter(cols.values())).shape[0]
             out = {}
             for name, expr in computed:
-                v = operators.eval_value(expr, cols, xp=jnp)
+                v = operators.eval_value(_subst(expr, lits), cols, xp=jnp)
                 out[name] = jnp.broadcast_to(v, (n,)) if v.ndim == 0 else v
             return out
 
         self._fn = project_fn if computed else None
 
-    def run(self, env: dict) -> dict:
-        if self._wide_consts \
+    def run(self, env: dict, lits: list = ()) -> dict:
+        own = _flat_lits([lits[i] for i in self._lit_idx])
+        computed_host = [(name, _subst(e, lits)) for name, e in
+                         self.computed]
+        if _any_wide_int(own) \
                 or any(_overflows_int32(env[k]) for k in self.refs) \
-                or any(_int_valued(e, env) for _, e in self.computed):
+                or any(_int_valued(e, env) for _, e in computed_host):
             # int32 narrowing of wide inputs, wide literals, or derived
             # integer arithmetic would corrupt values; evaluate the whole
             # projection interpreted (rare — TPC derived columns are
             # float arithmetic over in-range data).
             return dict(operators.op_project(ColumnBatch(env),
-                                             self.columns))
+                                             _subst(self.columns, lits)))
         n = len(next(iter(env.values()))) if env else 0
         out = {name: env[name] for name in self.passthrough}
         for name, expr in self.consts:
+            # Host-side constant fill with the ORIGINAL literal value:
+            # np.full of a Python float keeps the numpy backend's float64
+            # output dtype.
             out[name] = np.full(
-                n, np.asarray(operators.eval_value(expr, ColumnBatch({}))))
+                n, np.asarray(operators.eval_value(_subst(expr, lits),
+                                                   ColumnBatch({}))))
         if self._fn is not None:
             cols, _ = _bounded_shape({k: env[k] for k in self.refs}, n,
                                      self._seen)
-            for name, v in self._fn(cols).items():
+            for name, v in self._fn(cols, _narrow_lits(lits)).items():
                 out[name] = np.asarray(v)[:n]
         return {name: out[name] for name in self.order}
 
 
 @functools.lru_cache(maxsize=256)
 def _compile_segment(segment_json: str):
+    """Compiled stages for a CANONICAL segment JSON (literal values are
+    placeholder nodes, so shape-compatible queries share one entry)."""
     segment = json.loads(segment_json)
     stages = []
     i = 0
@@ -286,6 +373,28 @@ def _compile_segment(segment_json: str):
             stages.append(_ProjectStage(segment[i]["columns"]))
             i += 1
     return stages
+
+
+# Trace-cache observability (read by ``explain`` and the serving
+# metrics): lookups/hits of the canonical-keyed compiled-object caches.
+TRACE_CACHE_STATS = {"segment_lookups": 0, "segment_hits": 0,
+                     "tail_lookups": 0, "tail_hits": 0}
+
+
+def _counted(cache_fn, kind: str, *args):
+    """Call an lru-cached compile function, recording hit/miss. Fragments
+    execute serially per process, so the cache_info delta is race-free."""
+    before = cache_fn.cache_info().hits
+    out = cache_fn(*args)
+    TRACE_CACHE_STATS[f"{kind}_lookups"] += 1
+    if cache_fn.cache_info().hits > before:
+        TRACE_CACHE_STATS[f"{kind}_hits"] += 1
+    return out
+
+
+def _canon_json(ops: list[dict]) -> tuple[str, list]:
+    canon, lits = engine_plans.canonicalize_ops(ops)
+    return json.dumps(canon, sort_keys=True), lits
 
 
 _INT32_MAX = np.iinfo(np.int32).max
@@ -333,9 +442,10 @@ def _run_fused(batch: ColumnBatch, segment: list[dict]) -> ColumnBatch:
         return operators.run_pipeline_ops(batch, segment)
     # Per-stage int32-narrowing guards live in the stages themselves (a
     # stage may consume wide integers produced by an earlier one).
+    canon, lits = _canon_json(segment)
     env = {k: np.asarray(v) for k, v in batch.items()}
-    for stage in _compile_segment(json.dumps(segment)):
-        env = stage.run(env)
+    for stage in _counted(_compile_segment, "segment", canon):
+        env = stage.run(env, lits)
     return ColumnBatch(env)
 
 
@@ -384,20 +494,11 @@ class _FusedTail:
     partition) — see the section comment above."""
 
     def __init__(self, segment: list[dict], partition):
-        self.segment = segment
+        self.segment = segment               # canonical (placeholder) form
         self.partition = partition           # (key_col, partitions) | None
         self.join = segment[0] if segment and segment[0]["op"] == "hash_join" \
             else None
         self.ops = segment[1:] if self.join else segment
-        consts: list = []
-        for op in self.ops:
-            if op["op"] == "filter":
-                _expr_consts(op["expr"], consts)
-            else:
-                for c in op["columns"]:
-                    if not isinstance(c, str):
-                        _value_consts(c[1], consts)
-        self._wide_consts = _any_wide_int(consts)
         self._seen_probe: set = set()
         self._seen_build: set = set()
         self._seen_out: set = set()      # expanded-row counts (dup joins)
@@ -455,8 +556,8 @@ class _FusedTail:
 
     # -- guards -------------------------------------------------------------
     def _must_fall_back(self, batch, build, left_in, right_in,
-                        final_sources) -> bool:
-        if self._wide_consts:
+                        sources_host, ops_host, wide_lits) -> bool:
+        if wide_lits:
             return True
         if batch.num_rows == 0 or not len(batch):
             return True
@@ -467,30 +568,40 @@ class _FusedTail:
             rk = np.asarray(build[self.join["right_key"]])
             if lk.dtype.kind not in "iu" or rk.dtype.kind not in "iu":
                 return True
-            if _overflows_int32(lk) or _overflows_int32(rk):
-                _warn_int32_fallback("join key values exceed int32 range")
-                return True
+            for name, vals in ((self.join["left_key"], lk),
+                               (self.join["right_key"], rk)):
+                if _overflows_int32(vals):
+                    _warn_int32_fallback(
+                        f"join key column {name!r} exceeds int32 range "
+                        f"(max value {int(vals.max())}, "
+                        f"min value {int(vals.min())})")
+                    return True
         for c in left_in:
-            if _overflows_int32(np.asarray(batch[c])):
+            v = np.asarray(batch[c])
+            if _overflows_int32(v):
                 if self.join is not None:
                     _warn_int32_fallback(
-                        f"probe-side column {c!r} exceeds int32 range")
+                        f"probe-side column {c!r} exceeds int32 range "
+                        f"(max value {int(v.max())})")
                 return True
         for c in right_in:
-            if _overflows_int32(np.asarray(build[c])):
+            v = np.asarray(build[c])
+            if _overflows_int32(v):
                 if self.join is not None:
                     _warn_int32_fallback(
-                        f"build-side column {c!r} exceeds int32 range")
+                        f"build-side column {c!r} exceeds int32 range "
+                        f"(max value {int(v.max())})")
                 return True
         # Derived integer arithmetic would narrow to int32 (mirrors
-        # _ProjectStage's guard) — simulate dtype kinds through the ops.
+        # _ProjectStage's guard) — simulate dtype kinds through the ops
+        # (literal-substituted form: placeholders carry no type info).
         int_kinds = {c: np.asarray(v).dtype.kind in "iu"
                      for c, v in batch.items()}
         if self.join is not None:
             for c, v in build.items():
                 if c != self.join["right_key"]:
                     int_kinds[c] = np.asarray(v).dtype.kind in "iu"
-        for op in self.ops:
+        for op in ops_host:
             if op["op"] != "project":
                 continue
             kinds = {}
@@ -505,7 +616,7 @@ class _FusedTail:
                     kinds[name] = iv
             int_kinds = kinds
         if self.partition is not None:
-            src = final_sources[self.partition[0]]
+            src = sources_host[self.partition[0]]
             if src[0] == "const":
                 v = operators.eval_value(src[1], ColumnBatch({}))
                 if np.asarray(v).dtype.kind not in "iu":
@@ -514,31 +625,49 @@ class _FusedTail:
                 return True   # numpy truncates float keys; keep its path
         return False
 
-    def _numpy_tail(self, batch, build):
+    def _host_ops(self, lits) -> list[dict]:
+        """The segment's ops with original literal values re-bound — what
+        the interpreted fallback and host-side guards evaluate."""
+        out = []
+        for op in self.ops:
+            if op["op"] == "filter":
+                out.append({"op": "filter", "expr": _subst(op["expr"],
+                                                           lits)})
+            elif op["op"] == "project":
+                out.append({"op": "project",
+                            "columns": _subst(op["columns"], lits)})
+            else:
+                out.append(op)
+        return out
+
+    def _numpy_tail(self, batch, build, ops_host):
         if self.join is not None:
             batch = operators.op_hash_join(batch, build,
                                            self.join["left_key"],
                                            self.join["right_key"])
-        batch = operators.run_pipeline_ops(batch, self.ops)
+        batch = operators.run_pipeline_ops(batch, ops_host)
         if self.partition is not None:
             return operators.radix_partition(batch, self.partition[0],
                                              self.partition[1])
         return batch
 
     # -- traced functions ---------------------------------------------------
-    def _trace_ops(self, sources, env, match, n):
+    def _trace_ops(self, sources, env, match, n, lits):
         """Shared trace body (pure; called inside jit): fused predicate
         mask, derived projections, and the partition assignment over an
-        env of traced columns."""
+        env of traced columns. ``lits`` is the traced literal binding —
+        placeholder nodes re-bind to traced scalars here, so literal
+        values never bake into the trace."""
         for op in self.ops:
             if op["op"] == "filter":
-                match = match & operators.eval_expr(op["expr"], env,
-                                                    xp=jnp)
+                match = match & operators.eval_expr(
+                    _subst(op["expr"], lits), env, xp=jnp)
             else:
                 new = dict(env)        # keep shadowed inputs reachable for
                 for c in op["columns"]:            # later env lookups
                     if not isinstance(c, str):
-                        v = operators.eval_value(c[1], env, xp=jnp)
+                        v = operators.eval_value(_subst(c[1], lits), env,
+                                                 xp=jnp)
                         new[c[0]] = jnp.broadcast_to(v, (n,)) \
                             if v.ndim == 0 else v
                 env = new
@@ -546,9 +675,10 @@ class _FusedTail:
             key, nparts = self.partition[0], self.partition[1]
             src = sources[key]
             if src[0] == "const":
-                kv = int(np.asarray(
-                    operators.eval_value(src[1], ColumnBatch({}))))
-                assign = jnp.where(match, kv % nparts, nparts)
+                kv = operators.eval_value(_subst(src[1], lits),
+                                          env, xp=jnp)
+                assign = jnp.where(match,
+                                   kv.astype(jnp.int32) % nparts, nparts)
             else:
                 assign = jnp.where(
                     match, env[key].astype(jnp.int32) % nparts, nparts)
@@ -563,7 +693,7 @@ class _FusedTail:
         trace_ops = self._trace_ops
 
         @functools.partial(jax.jit, static_argnames=("iters", "r"))
-        def fn(left_cols, bkeys, bpayload, scalars, starts, n_valid,
+        def fn(left_cols, lits, bkeys, bpayload, scalars, starts, n_valid,
                *, iters, r):
             n = next(iter(left_cols.values())).shape[0]
             valid = jnp.arange(n, dtype=jnp.int32) < n_valid
@@ -579,7 +709,7 @@ class _FusedTail:
                     env[c] = bpayload[c][pos]
             else:
                 match = valid
-            assign, out = trace_ops(sources, env, match, n)
+            assign, out = trace_ops(sources, env, match, n, lits)
             res = (assign, out)
             return res + ((pos,) if needs_pos else ())
 
@@ -607,7 +737,8 @@ class _FusedTail:
         trace_ops = self._trace_ops
 
         @functools.partial(jax.jit, static_argnames=("r", "n_out"))
-        def expand_fn(left_cols, bpayload, lo, prefix, total, *, r, n_out):
+        def expand_fn(left_cols, lits, bpayload, lo, prefix, total,
+                      *, r, n_out):
             j = jnp.arange(n_out, dtype=jnp.int32)
             i = jnp.clip(
                 jnp.searchsorted(prefix, j, side="right").astype(jnp.int32)
@@ -617,7 +748,7 @@ class _FusedTail:
             env = {c: left_cols[c][i] for c in left_in}
             for c in right_in:
                 env[c] = bpayload[c][rpos]
-            assign, out = trace_ops(sources, env, valid, n_out)
+            assign, out = trace_ops(sources, env, valid, n_out, lits)
             return assign, out, i, rpos
 
         return expand_fn
@@ -632,13 +763,15 @@ class _FusedTail:
         order = lividx[np.argsort(assign[lividx], kind="stable")]
         return order, np.bincount(assign[lividx], minlength=r)
 
-    def _gather_out(self, batch, bpay_out, sources, derived, order,
+    def _gather_out(self, batch, bpay_out, sources_host, derived, order,
                     left_sel, right_sel, nrows):
         """Exactly one gather per output column — from the ORIGINAL
         arrays for pass-through columns (dtype preserved), from the
-        trace outputs for derived ones."""
+        trace outputs for derived ones. ``sources_host`` carries the
+        original (un-placeholdered) literal values so const fills keep
+        numpy dtype semantics."""
         out = {}
-        for name, src in sources.items():
+        for name, src in sources_host.items():
             if src[0] == "left":
                 out[name] = np.asarray(batch[src[1]])[left_sel]
             elif src[0] == "right":
@@ -659,19 +792,25 @@ class _FusedTail:
                 for p in range(r)]
 
     # -- execution ----------------------------------------------------------
-    def run(self, batch: ColumnBatch, build):
+    def run(self, batch: ColumnBatch, build, lits=()):
         left_names = list(batch)
         right_names = list(build) if build is not None else []
         final_sources, left_in, right_in = self._resolve_needed(
             left_names, right_names)
+        ops_host = self._host_ops(lits)
+        sources_host = {k: ((s[0], _subst(s[1], lits)) if s[0] == "const"
+                            else s)
+                        for k, s in final_sources.items()}
         traced_work = self.join is not None \
             or any(op["op"] == "filter" for op in self.ops) \
             or any(s[0] == "derived" for s in final_sources.values())
         if not traced_work or not left_in:
-            return self._numpy_tail(batch, build)
+            return self._numpy_tail(batch, build, ops_host)
+        wide_lits = _any_wide_int(_flat_lits(lits))
         if self._must_fall_back(batch, build, left_in, right_in,
-                                final_sources):
-            return self._numpy_tail(batch, build)
+                                sources_host, ops_host, wide_lits):
+            return self._numpy_tail(batch, build, ops_host)
+        lits_t = _narrow_lits(lits)
 
         n = batch.num_rows
         r = self.partition[1] if self.partition is not None else 1
@@ -716,32 +855,33 @@ class _FusedTail:
             {c: np.asarray(batch[c]) for c in left_in}, n, self._seen_probe)
 
         if has_dups:
-            return self._run_dup(batch, final_sources, left_in, right_in,
-                                 left_cols, bkeys_pad, bpay_sorted,
-                                 bpay_out, scalars, starts, iters, n, r,
-                                 build, (tuple(left_names),
-                                         tuple(right_names)))
+            return self._run_dup(batch, final_sources, sources_host,
+                                 left_in, right_in, left_cols, lits_t,
+                                 bkeys_pad, bpay_sorted, bpay_out,
+                                 scalars, starts, iters, n, r,
+                                 build, ops_host, (tuple(left_names),
+                                                   tuple(right_names)))
 
         key = (tuple(left_names), tuple(right_names), needs_pos)
         fn = self._fns.get(key)
         if fn is None:
             fn = self._build_fn(final_sources, left_in, right_in, needs_pos)
             self._fns[key] = fn
-        res = fn(left_cols, bkeys_pad, bpay_sorted, scalars, starts,
+        res = fn(left_cols, lits_t, bkeys_pad, bpay_sorted, scalars, starts,
                  np.int32(n), iters=iters, r=r)
         assign = np.asarray(res[0])[:n]
         derived = {name: v for name, v in res[1].items()}
         pos = np.asarray(res[2])[:n] if needs_pos else None
 
         order, counts = self._stable_partition(assign, r)
-        out = self._gather_out(batch, bpay_out, final_sources, derived,
+        out = self._gather_out(batch, bpay_out, sources_host, derived,
                                order, order,
                                pos[order] if pos is not None else None, n)
         return self._emit(out, counts, r)
 
-    def _run_dup(self, batch, sources, left_in, right_in, left_cols,
-                 bkeys_pad, bpay_sorted, bpay_out, scalars, starts, iters,
-                 n, r, build, schema_key):
+    def _run_dup(self, batch, sources, sources_host, left_in, right_in,
+                 left_cols, lits_t, bkeys_pad, bpay_sorted, bpay_out,
+                 scalars, starts, iters, n, r, build, ops_host, schema_key):
         """Compiled duplicate-build-key join: counts/prefix pass, then the
         in-trace expansion (see the section comment above)."""
         cf = self._fns.get(("count",))
@@ -757,11 +897,11 @@ class _FusedTail:
         if total == 0:
             # Nothing matched: the interpreted tail is O(probe) and keeps
             # the empty-output schema semantics in one place.
-            return self._numpy_tail(batch, build)
+            return self._numpy_tail(batch, build, ops_host)
         if total > _INT32_MAX:
             _warn_int32_fallback(
                 f"duplicate-key expansion of {total} rows exceeds int32")
-            return self._numpy_tail(batch, build)
+            return self._numpy_tail(batch, build, ops_host)
 
         n_out = total
         if n_out not in self._seen_out and \
@@ -774,7 +914,7 @@ class _FusedTail:
         if ef is None:
             ef = self._build_expand_fn(sources, left_in, right_in)
             self._fns[key] = ef
-        res = ef(left_cols, bpay_sorted, np.asarray(lo),
+        res = ef(left_cols, lits_t, bpay_sorted, np.asarray(lo),
                  prefix.astype(np.int32), np.int32(total), r=r,
                  n_out=n_out)
         assign = np.asarray(res[0])[:total]
@@ -783,8 +923,8 @@ class _FusedTail:
         rpos = np.asarray(res[3])[:total]
 
         order, counts_p = self._stable_partition(assign, r)
-        out = self._gather_out(batch, bpay_out, sources, derived, order,
-                               lsel[order], rpos[order], total)
+        out = self._gather_out(batch, bpay_out, sources_host, derived,
+                               order, lsel[order], rpos[order], total)
         return self._emit(out, counts_p, r)
 
 
@@ -800,9 +940,9 @@ def _strip_build(op: dict) -> dict:
 def _run_tail(batch: ColumnBatch, segment: list[dict], partition):
     build = segment[0].get("build") if segment and \
         segment[0]["op"] == "hash_join" else None
-    tail = _compile_tail(json.dumps([_strip_build(op) for op in segment]),
-                         partition)
-    return tail.run(batch, build)
+    canon, lits = _canon_json([_strip_build(op) for op in segment])
+    tail = _counted(_compile_tail, "tail", canon, partition)
+    return tail.run(batch, build, lits)
 
 
 # ---------------------------------------------------------------------------
@@ -1014,3 +1154,63 @@ def run_pipeline_collect(batch: ColumnBatch, ops: list[dict],
             parts = _run_tail(head, seg, (key0, 1))
             return _run_hash_agg(parts[0], agg["keys"], agg["aggs"])
     return run_pipeline(batch, ops, backend=backend)
+
+# ---------------------------------------------------------------------------
+# Query-level compiled-plan cache
+# ---------------------------------------------------------------------------
+
+class CompiledPlanCache:
+    """Query-level view of the compiled-plan cache.
+
+    The operative trace sharing lives in the canonical-keyed lru caches
+    above (``_compile_segment`` / ``_compile_tail``): two plans with the
+    same ``plans.plan_shape_hash`` hand those caches identical keys, so a
+    plan-level hit means every traced object the query's fragments will
+    look up is already resident (modulo lru eviction, which only costs a
+    retrace). This class keys that property by shape hash — an LRU of the
+    shapes whose compiled callables have been materialized — and exposes
+    the hit/miss counters that serving metrics and ``explain`` report.
+
+    Literal values are NOT part of the key (they travel as traced
+    arguments); tables are keyed positionally, so a same-shape query over
+    different tables also hits. ``maxsize`` bounds remembered shapes, not
+    traces — the trace caches have their own bound.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, plan) -> tuple[str, bool]:
+        """Record a query against the cache. Returns ``(shape_hash,
+        hit)``; on a miss the shape is inserted so the next same-shape
+        query hits."""
+        key = engine_plans.plan_shape_hash(plan)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return key, True
+        self.misses += 1
+        self._entries[key] = plan.name
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return key, False
+
+    def contains(self, shape_hash: str) -> bool:
+        return shape_hash in self._entries
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries), **TRACE_CACHE_STATS}
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+# Process-wide instance used by ``Coordinator.execute`` (the trace caches
+# it fronts are process-wide too).
+PLAN_CACHE = CompiledPlanCache()

@@ -26,6 +26,7 @@ from repro.core.elastic_pool import ColdStartModel, ElasticPool, ProvisionedPool
 from repro.core.scheduler import Fragment, Stage, StageScheduler, StragglerPolicy
 from repro.core.storage_service import ObjectStore, RequestStats
 from repro.engine import columnar, optimizer, worker
+from repro.engine import compile as engine_compile
 from repro.engine.columnar import ColumnBatch
 from repro.engine.logical import LogicalQuery
 from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
@@ -66,6 +67,9 @@ class QueryResult:
     request_stats: RequestStats
     peak_workers: int
     stage_node_seconds: list[tuple[int, float]]
+    # Compiled-plan cache observability (jit backend; empty/False on numpy).
+    plan_shape_hash: str = ""
+    plan_cache_hit: bool = False
 
 
 class Coordinator:
@@ -97,7 +101,6 @@ class Coordinator:
         self.scheduler = StageScheduler(self.pool, StragglerPolicy(),
                                         rng_seed=rng_seed)
         self.table_keys: dict[str, list[str]] = {}
-        self._shuffle_spec: dict[str, int] = {}
 
     def register_table(self, name: str, keys: list[str]) -> None:
         self.table_keys[name] = keys
@@ -119,13 +122,28 @@ class Coordinator:
                 ) -> QueryResult:
         plan.validate()   # fail fast, not as a KeyError mid-stage
         query_id = query_id or plan.name
+        shape_hash, cache_hit = "", False
+        if self.backend == "jit":
+            # Compiled-plan cache: a hit means every canonical trace key
+            # this plan's fragments will look up is already resident.
+            shape_hash, cache_hit = engine_compile.PLAN_CACHE.lookup(plan)
         stats_before = dataclasses.replace(self.store.stats)
         # Per-query shuffle bitmap registry: writers record which
         # partitions they produced, missing_ok readers validate absences.
         registry = worker.ShuffleRegistry()
         stages, frag_counts = self._compile(plan, query_id, registry)
         results = self.scheduler.run(stages)
+        return self.finalize(plan, query_id, frag_counts, results,
+                             stats_before, shape_hash, cache_hit)
 
+    def finalize(self, plan: QueryPlan, query_id: str,
+                 frag_counts: dict[str, int], results: dict,
+                 stats_before: RequestStats, shape_hash: str = "",
+                 cache_hit: bool = False) -> QueryResult:
+        """Merge the terminal pipeline's collect fragments and account
+        runtime/cost from the per-stage results — shared by the
+        single-query path above and the multi-query server (which runs
+        the stages through its own interleaving scheduler)."""
         # Merge collected fragments of the terminal pipeline.
         terminal = plan.pipelines[-1]
         merged = self._merge_collect(query_id, terminal,
@@ -155,22 +173,37 @@ class Coordinator:
                 for n, r in results.items()},
             request_stats=delta, peak_workers=max(
                 r.worker_count for r in results.values()),
-            stage_node_seconds=stage_nodes)
+            stage_node_seconds=stage_nodes,
+            plan_shape_hash=shape_hash, plan_cache_hit=cache_hit)
 
     # ------------------------------------------------------------------
+    def compile_stages(self, plan: QueryPlan, query_id: str,
+                       registry: Optional[worker.ShuffleRegistry] = None
+                       ) -> tuple[list[Stage], dict[str, int]]:
+        """Compile a physical plan into schedulable stages. Public entry
+        for the multi-query server, which pools stages from many queries
+        into one scheduler run."""
+        plan.validate()
+        return self._compile(plan, query_id, registry)
+
     def _compile(self, plan: QueryPlan, query_id: str,
                  registry: Optional[worker.ShuffleRegistry] = None
                  ) -> tuple[list[Stage], dict[str, int]]:
         frag_counts: dict[str, int] = {}
         stages: list[Stage] = []
+        # Shuffle fan-out agreed between a pipeline's writers and its
+        # readers — per compile, so concurrent queries reusing pipeline
+        # names (every q12 names its pipelines the same) cannot collide.
+        shuffle_spec: dict[str, int] = {}
         for pipe in plan.pipelines:
             n_frags, assignments = self._parallelism(pipe, frag_counts,
-                                                     query_id)
+                                                     query_id, shuffle_spec)
             frag_counts[pipe.name] = n_frags
             fragments = []
             for i in range(n_frags):
                 spec = self._fragment_spec(plan, pipe, query_id, i,
-                                           assignments, frag_counts)
+                                           assignments, frag_counts,
+                                           shuffle_spec)
                 frag = Fragment(fragment_id=i, work=None)
 
                 def work(s=spec, f=frag):
@@ -191,7 +224,8 @@ class Coordinator:
         return stages, frag_counts
 
     def _parallelism(self, pipe: Pipeline, frag_counts: dict[str, int],
-                     query_id: str) -> tuple[int, list[list[str]]]:
+                     query_id: str, shuffle_spec: dict[str, int]
+                     ) -> tuple[int, list[list[str]]]:
         if isinstance(pipe.input, TableInput):
             keys = self.table_keys[pipe.input.table]
             if pipe.partitioning is not None \
@@ -223,11 +257,12 @@ class Coordinator:
         # Shuffle consumer: parallelism = upstream shuffle partition count
         # (readers must align with the writers' partitioning).
         src = pipe.input.from_pipeline
-        return self._shuffle_spec[src], []
+        return shuffle_spec[src], []
 
     def _fragment_spec(self, plan: QueryPlan, pipe: Pipeline, query_id: str,
                        i: int, assignments: list[list[str]],
-                       frag_counts: dict[str, int]) -> worker.FragmentSpec:
+                       frag_counts: dict[str, int],
+                       shuffle_spec: dict[str, int]) -> worker.FragmentSpec:
         if isinstance(pipe.input, TableInput):
             read_keys = assignments[i]
             columns = pipe.input.columns
@@ -260,7 +295,7 @@ class Coordinator:
             read_keys2 = [worker.shuffle_key(query_id, src2, w, i)
                           for w in range(frag_counts[src2])]
         if isinstance(pipe.output, ShuffleOutput):
-            self._shuffle_spec[pipe.name] = pipe.output.partitions
+            shuffle_spec[pipe.name] = pipe.output.partitions
             output = {"type": "shuffle",
                       "partition_by": pipe.output.partition_by,
                       "partitions": pipe.output.partitions}

@@ -72,9 +72,17 @@ def format_physical(plan: QueryPlan) -> str:
 
 def explain(query: LogicalQuery, stats: Optional[optimizer.Stats] = None,
             backend: str = "jit") -> str:
+    from repro.engine import compile as engine_compile
+    from repro.engine import plans as plans_mod
+
     plan, report = optimizer.lower(query, stats=stats, backend=backend)
+    shape_hash = plans_mod.plan_shape_hash(plan)
+    cache_state = "hit" if engine_compile.PLAN_CACHE.contains(shape_hash) \
+        else "miss"
     sections = [
         f"query: {query.name} (backend={backend})",
+        f"plan shape: {shape_hash[:16]} "
+        f"(compiled-plan cache: {cache_state})",
         "",
         "logical plan",
         "============",

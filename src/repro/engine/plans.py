@@ -40,6 +40,7 @@ both kinds before the coordinator schedules a single fragment.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Optional
 
@@ -365,3 +366,201 @@ def _input_from(raw: dict):
     if raw["type"] == "table":
         return TableInput(raw["table"], raw["columns"])
     return ShuffleInput(raw["from_pipeline"])
+
+
+# ---------------------------------------------------------------------------
+# Canonical plan shape (compiled-plan cache keys)
+# ---------------------------------------------------------------------------
+#
+# Two queries share compiled traces when they agree on everything XLA
+# specializes on — op structure, referenced column names, shuffle fan-outs,
+# literal dtype classes and in-list lengths — regardless of the literal
+# VALUES (filter constants, projection coefficients) and table names. The
+# canonicalizer below splits a plan along exactly that line: scalar/list
+# literals in filter and project expressions are replaced by positional
+# ``[LIT, index, dtype-tag]`` placeholder nodes and collected into a
+# side list, table names are renamed positionally, pipeline names are
+# renamed positionally (they embed the query name). ``plan_shape_hash``
+# is a sha256 over the canonical JSON — a pure function of plan
+# structure, stable across processes (no use of Python's salted
+# ``hash``); ``plan_literal_hash`` covers everything the shape hash
+# deliberately leaves out, so (shape, literal) identifies a query's
+# exact semantics for result caching.
+#
+# Placeholders occupy literal slots ONLY (comparison right-hand sides,
+# ``between`` bounds, ``in``/``case_in`` value lists, ``const`` payloads)
+# so the grammar walkers in ``logical`` (``pred_columns``,
+# ``value_columns``) traverse canonical expressions unchanged. The jit
+# backend (``engine.compile``) re-binds placeholders at call time —
+# to traced scalars inside a jit trace, to the original Python values on
+# interpreted fallbacks — so literal values never bake into a trace.
+
+LIT = "__lit__"
+
+
+def _pyval(v):
+    """Plain-Python view of a literal (numpy scalars -> Python scalars) so
+    canonical JSON and tags do not depend on who built the plan."""
+    return v.item() if hasattr(v, "item") else v
+
+
+def _scalar_tag(v) -> Optional[str]:
+    if isinstance(v, bool):
+        return "b"
+    if isinstance(v, int):
+        return "i"
+    if isinstance(v, float):
+        return "f"
+    return None   # non-numeric literals stay structural
+
+
+def _ph(v, lits: list):
+    v = _pyval(v)
+    tag = _scalar_tag(v)
+    if tag is None:
+        return v
+    lits.append(v)
+    return [LIT, len(lits) - 1, tag]
+
+
+def _ph_list(vals, lits: list):
+    pv = [_pyval(v) for v in vals]
+    tags = [_scalar_tag(v) for v in pv]
+    if not pv or any(t is None for t in tags):
+        return list(vals)
+    # The list length is structural (it is the shape of the traced isin
+    # constant); the element dtype class is structural too.
+    if "f" in tags:
+        kind = "f"
+    elif all(t == "b" for t in tags):
+        kind = "b"
+    else:
+        kind = "i"
+    lits.append(pv)
+    return [LIT, len(lits) - 1, f"{kind}{len(pv)}"]
+
+
+def _canon_pred(expr, lits: list):
+    op = expr[0]
+    if op in ("and", "or"):
+        return [op] + [_canon_pred(s, lits) for s in expr[1:]]
+    if op == "between":
+        return [op, expr[1], _ph(expr[2], lits), _ph(expr[3], lits)]
+    if op == "in":
+        return [op, expr[1], _ph_list(expr[2], lits)]
+    if op == "ltcol":
+        return list(expr)
+    # lt | le | ge | gt | eq | ne
+    return [op, expr[1], _ph(expr[2], lits)]
+
+
+def _canon_value(expr, lits: list):
+    if isinstance(expr, str):
+        return expr
+    op = expr[0]
+    if op == "const":
+        return [op, _ph(expr[1], lits)]
+    if op in ("mul", "add", "sub", "div"):
+        return [op, _canon_value(expr[1], lits), _canon_value(expr[2], lits)]
+    if op in ("sub1", "add1"):
+        return [op, _canon_value(expr[1], lits)]
+    if op == "case_in":
+        return [op, expr[1], _ph_list(expr[2], lits)] + list(expr[3:])
+    return [_pyval(x) if not isinstance(x, (list, str)) else x
+            for x in expr]
+
+
+def canonicalize_ops(ops: list[dict], lits: Optional[list] = None
+                     ) -> tuple[list[dict], list]:
+    """Split the literals out of an op chain. Returns ``(canonical_ops,
+    literals)``: filter/project expressions carry ``[LIT, i, tag]``
+    placeholder nodes, ``literals[i]`` holds the original value (a scalar,
+    or the whole list for ``in``/``case_in``). Other ops (hash_join,
+    hash_agg, udf) are structural and pass through copied."""
+    lits = [] if lits is None else lits
+    out = []
+    for op in ops:
+        kind = op.get("op")
+        if kind == "filter":
+            out.append({"op": "filter", "expr": _canon_pred(op["expr"],
+                                                            lits)})
+        elif kind == "project":
+            cols = [c if isinstance(c, str)
+                    else [c[0], _canon_value(c[1], lits)]
+                    for c in op["columns"]]
+            out.append({"op": "project", "columns": cols})
+        else:
+            out.append(dict(op))
+    return out, lits
+
+
+def canonical_plan(plan: "QueryPlan") -> tuple[dict, dict]:
+    """Canonical (shape, residue) decomposition of a plan. ``shape`` is
+    the deterministic JSON-able structure two trace-sharing queries agree
+    on; ``residue`` holds what the shape hash leaves out: the literal
+    values (in placeholder order), the positional->actual table name map,
+    and the plan/pipeline names."""
+    pipe_names = {p.name: f"p{i}" for i, p in enumerate(plan.pipelines)}
+    tables: dict[str, str] = {}
+    lits: list = []
+
+    def table_alias(t: str) -> str:
+        if t not in tables:
+            tables[t] = f"t{len(tables)}"
+        return tables[t]
+
+    def canon_input(inp):
+        if inp is None:
+            return None
+        if isinstance(inp, TableInput):
+            return {"type": "table", "table": table_alias(inp.table),
+                    "columns": list(inp.columns)}
+        return {"type": "shuffle", "from": pipe_names[inp.from_pipeline]}
+
+    pipes = []
+    for p in plan.pipelines:
+        ops = list(p.ops)
+        if p.join is not None:   # normalize the legacy join spec
+            ops.insert(0, {"op": "hash_join", **p.join})
+        cops, lits = canonicalize_ops(ops, lits)
+        if isinstance(p.output, ShuffleOutput):
+            out = {"type": "shuffle", "by": p.output.partition_by,
+                   "partitions": p.output.partitions}
+        else:
+            out = {"type": "collect"}
+        pipes.append({"name": pipe_names[p.name],
+                      "input": canon_input(p.input),
+                      "input2": canon_input(p.input2),
+                      "ops": cops, "output": out,
+                      "fragments": p.fragments,
+                      "partitioning": p.partitioning,
+                      "partitioning2": p.partitioning2})
+    shape = {"pipelines": pipes}
+    residue = {"name": plan.name,
+               "tables": {alias: t for t, alias in tables.items()},
+               "literals": lits}
+    return shape, residue
+
+
+def _sha(obj) -> str:
+    text = json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def plan_shape_hash(plan: "QueryPlan") -> str:
+    """Deterministic (cross-process) hash of a plan's canonical shape:
+    structure, column names, fan-outs, literal dtype classes — NOT
+    literal values, table names, or the query name. Queries with equal
+    shape hashes share every compiled trace of the jit backend."""
+    shape, _ = canonical_plan(plan)
+    return _sha(shape)
+
+
+def plan_cache_key(plan: "QueryPlan") -> tuple[str, str]:
+    """``(shape_hash, literal_hash)`` in one canonicalization pass. The
+    pair identifies a query's exact semantics up to the data it reads:
+    the shape hash keys the compiled-plan (trace) cache, the pair keys
+    the serving layer's result cache (alongside table etags)."""
+    shape, residue = canonical_plan(plan)
+    return _sha(shape), _sha(residue)

@@ -531,6 +531,11 @@ def test_int32_overflow_fallback_warns_once(monkeypatch):
     hits = [w for w in rec if issubclass(w.category, RuntimeWarning)
             and "int32" in str(w.message)]
     assert len(hits) == 1
+    # The warning must be actionable: it names the offending join key
+    # column and the value that overflowed int32.
+    msg = str(hits[0].message)
+    assert "'k'" in msg
+    assert str(2**40) in msg
 
 
 # ---------------------------------------------------------------------------

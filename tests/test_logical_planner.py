@@ -629,7 +629,16 @@ def test_explain_main_entrypoint(capsys):
     assert explain.main(["tpch_q12"]) == 0
     out = capsys.readouterr().out
     assert "physical plan" in out and "join_agg" in out
+    # The explain output names the canonical plan shape that keys the
+    # compiled-plan cache.
+    assert "plan shape:" in out
+    # Unknown query: nonzero exit, and stderr lists the available names
+    # so the user can correct the invocation without reading the source.
     assert explain.main(["nope"]) == 2
+    err = capsys.readouterr().err
+    assert "unknown query 'nope'" in err
+    for name in ("tpch_q1", "tpch_q6", "tpch_q12", "tpcxbb_q3"):
+        assert name in err
 
 
 # ---------------------------------------------------------------------------
