@@ -15,7 +15,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
-REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving"
+REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange"
 python -m benchmarks.check_regression \
     --require-section "$REQUIRED_SECTIONS" "$@"
 

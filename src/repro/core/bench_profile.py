@@ -14,6 +14,8 @@ import functools
 import json
 import os
 import pathlib
+import threading
+import warnings
 from typing import Optional
 
 MIB = 1024.0 ** 2
@@ -54,6 +56,8 @@ def load(path: Optional[str] = None) -> dict:
 
 def clear_cache() -> None:
     _load_cached.cache_clear()
+    with _warn_lock:
+        _warned_sections.clear()
 
 
 def cpu_bytes_per_s(backend: str, fallback: float,
@@ -68,12 +72,41 @@ def cpu_bytes_per_s(backend: str, fallback: float,
     return float(mib) * MIB / float(secs)
 
 
-def section(name: str, path: Optional[str] = None) -> dict:
-    """One benchmark section as a dict (``{}`` when absent/malformed).
-    The serving layer reads ``concurrent_serving`` through this to
-    report the last recorded throughput/hit-rate alongside live runs."""
-    sec = load(path).get(name, {})
-    return sec if isinstance(sec, dict) else {}
+_warned_sections: set[str] = set()
+_warn_lock = threading.Lock()
+
+
+def section(name: str, path: Optional[str] = None,
+            fallback: Optional[dict] = None) -> dict:
+    """One benchmark section as a dict; ``fallback`` (default ``{}``) when
+    absent or malformed.
+
+    The serving layer reads ``concurrent_serving`` through this to report
+    the last recorded throughput/hit-rate alongside live runs; the
+    optimizer's exchange-tier placement reads ``tiered_exchange`` for
+    measured per-tier throughputs. A *stale* profile — the file exists but
+    predates the section, e.g. an old ``BENCH_engine.json`` on a checkout
+    that grew a new bench — warns once per section name and returns the
+    fallback, so planner estimates degrade instead of silently running on
+    an empty dict nobody noticed. A missing file stays silent: fresh
+    checkouts have no profile at all and every accessor already documents
+    that fallback.
+    """
+    fb = {} if fallback is None else fallback
+    data = load(path)
+    sec = data.get(name)
+    if isinstance(sec, dict):
+        return sec
+    if data:  # profile present but lacks (or mangles) this section: stale
+        with _warn_lock:
+            if name not in _warned_sections:
+                _warned_sections.add(name)
+                warnings.warn(
+                    f"bench profile has no '{name}' section (stale "
+                    f"BENCH_engine.json? re-run benchmarks/engine_bench.py);"
+                    f" using fallback estimates", RuntimeWarning,
+                    stacklevel=2)
+    return fb
 
 
 def shuffle_bytes_per_s(fallback: float,

@@ -245,6 +245,167 @@ def table8() -> dict[str, Optional[float]]:
 
 
 # ---------------------------------------------------------------------------
+# Live planner input: per-shuffle exchange-tier placement (object vs KV)
+# ---------------------------------------------------------------------------
+
+# The paper's 7,076 MiB Lambda worker (Table 6) — what one second of a worker
+# blocked on an exchange round trip costs. Kept local: importing the
+# coordinator here would be circular.
+EXCHANGE_WORKER_MEM_GIB = 7076.0 / 1024.0
+DEFAULT_WORKER_USD_PER_S = pricing.LAMBDA_USD_PER_GIB_S * EXCHANGE_WORKER_MEM_GIB
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlacement:
+    """Outcome of one per-shuffle tier decision, with its inputs preserved
+    so the optimizer can emit them as trace lines and ``explain`` can render
+    the break-even arithmetic."""
+
+    tier: str                            # "object" | "kv"
+    beas_bytes: Optional[float]          # None => KV never breaks even
+    access_bytes: Optional[float]        # None => no size estimate
+    n_objects: int                       # writers x partitions round trips
+    object_usd: Optional[float] = None   # modeled whole-shuffle cost
+    kv_usd: Optional[float] = None
+    object_s: Optional[float] = None     # modeled per-object round trip
+    kv_s: Optional[float] = None
+    note: str = ""
+
+
+def exchange_beas(*,
+                  object_prices: pricing.StoragePricing = pricing.S3_STANDARD,
+                  kv_prices: pricing.StoragePricing = pricing.KV_MEMORY,
+                  object_profile=None, kv_profile=None,
+                  worker_usd_per_s: float = DEFAULT_WORKER_USD_PER_S,
+                  residency_s: float = 60.0,
+                  object_bytes_per_s: Optional[float] = None,
+                  kv_bytes_per_s: Optional[float] = None) -> Optional[float]:
+    """Break-even access size (bytes/object) below which the KV tier wins.
+
+    Same shape as ``beas`` (Table 8), applied between the two exchange tiers
+    instead of storage-vs-VM-network. One shuffle object costs a *fixed*
+    per-access amount (write + read request fees, plus the worker-seconds
+    burned waiting out each tier's median request latency) and a *marginal*
+    per-byte amount (transfer fees, capacity rent over the shuffle's
+    residency, worker-seconds per byte at the tier's effective bandwidth).
+    The object store's requests are expensive and slow; KV's bytes are
+    expensive:
+
+        BEAS = (fixed_object - fixed_kv) / (marginal_kv - marginal_object)
+
+    Returns ``None`` when KV never breaks even (its fixed per-access cost
+    already exceeds the object store's, so no access is small enough) and
+    ``math.inf`` when KV wins at every size (its per-byte premium is not a
+    premium under the given throughput profile).
+    """
+    from repro.core import storage_service as ss
+    obj_prof = object_profile or ss.S3_STANDARD_PROFILE
+    kv_prof = kv_profile or ss.KV_MEMORY_PROFILE
+
+    def fixed(prices, prof):
+        lat = prof.write_latency_q[0] + prof.read_latency_q[0]
+        return prices.usd_per_write + prices.usd_per_read \
+            + worker_usd_per_s * lat
+
+    def marginal(prices, prof, bytes_per_s):
+        write_bw = bytes_per_s or prof.write_bw_per_client
+        read_bw = bytes_per_s or prof.read_bw_per_client
+        transfer = (prices.usd_per_gib_read + prices.usd_per_gib_write) / GIB
+        rent = pricing.storage_capacity_cost(prices, 1.0 / GIB,
+                                             residency_s / 3600.0)
+        wait = worker_usd_per_s * (1.0 / write_bw + 1.0 / read_bw)
+        return transfer + rent + wait
+
+    advantage = fixed(object_prices, obj_prof) - fixed(kv_prices, kv_prof)
+    premium = marginal(kv_prices, kv_prof, kv_bytes_per_s) \
+        - marginal(object_prices, obj_prof, object_bytes_per_s)
+    if advantage <= 0.0:
+        return None
+    if premium <= 0.0:
+        return math.inf
+    return advantage / premium
+
+
+def _exchange_tier_model(prices: pricing.StoragePricing, prof,
+                         worker_usd_per_s: float, total_bytes: float,
+                         n_objects: int, residency_s: float,
+                         bytes_per_s: Optional[float]) -> tuple[float, float]:
+    """(whole-shuffle USD, per-object round-trip seconds) on one tier."""
+    write_bw = bytes_per_s or prof.write_bw_per_client
+    read_bw = bytes_per_s or prof.read_bw_per_client
+    per_obj = total_bytes / max(n_objects, 1)
+    rt_s = prof.write_latency_q[0] + prof.read_latency_q[0] \
+        + per_obj / write_bw + per_obj / read_bw
+    usd = pricing.storage_request_cost(
+        prices, reads=n_objects, writes=n_objects,
+        read_bytes=int(total_bytes), write_bytes=int(total_bytes))
+    usd += pricing.storage_capacity_cost(prices, total_bytes / GIB,
+                                         residency_s / 3600.0)
+    usd += worker_usd_per_s * rt_s * n_objects
+    return usd, rt_s
+
+
+def place_exchange(shuffle_bytes: Optional[float], writers: int,
+                   partitions: int, *,
+                   object_prices: pricing.StoragePricing = pricing.S3_STANDARD,
+                   kv_prices: pricing.StoragePricing = pricing.KV_MEMORY,
+                   object_profile=None, kv_profile=None,
+                   worker_usd_per_s: float = DEFAULT_WORKER_USD_PER_S,
+                   residency_s: float = 60.0,
+                   object_bytes_per_s: Optional[float] = None,
+                   kv_bytes_per_s: Optional[float] = None
+                   ) -> ExchangePlacement:
+    """Choose the exchange tier for one shuffle from its estimated bytes and
+    fan-out (request count scales with producer x consumer fragments).
+
+    Degenerate shuffles are handled without special cases: 0 bytes means the
+    fixed per-access advantage is the whole story (KV wins if it breaks even
+    at all), fan-out 1 just means one round trip. Missing estimates and a
+    ``None`` break-even both fall back to the object store with a note —
+    never a crash (the optimizer records the note as a trace line).
+    """
+    from repro.core import storage_service as ss
+    obj_prof = object_profile or ss.S3_STANDARD_PROFILE
+    kv_prof = kv_profile or ss.KV_MEMORY_PROFILE
+    n = max(1, int(writers)) * max(1, int(partitions))
+    beas_bytes = exchange_beas(
+        object_prices=object_prices, kv_prices=kv_prices,
+        object_profile=obj_prof, kv_profile=kv_prof,
+        worker_usd_per_s=worker_usd_per_s, residency_s=residency_s,
+        object_bytes_per_s=object_bytes_per_s, kv_bytes_per_s=kv_bytes_per_s)
+
+    if shuffle_bytes is None:
+        return ExchangePlacement(
+            "object", beas_bytes, None, n,
+            note="no size estimate -> object store (fallback)")
+
+    total = float(shuffle_bytes)
+    access = total / n
+    object_usd, object_s = _exchange_tier_model(
+        object_prices, obj_prof, worker_usd_per_s, total, n, residency_s,
+        object_bytes_per_s)
+    kv_usd, kv_s = _exchange_tier_model(
+        kv_prices, kv_prof, worker_usd_per_s, total, n, residency_s,
+        kv_bytes_per_s)
+
+    if beas_bytes is None:
+        tier = "object"
+        note = ("kv fixed per-access cost never undercuts the object store "
+                "-> object store (fallback)")
+    elif access < beas_bytes:
+        tier = "kv"
+        note = (f"access {access:.0f} B/object < break-even "
+                f"{beas_bytes:.0f} B -> kv")
+    else:
+        tier = "object"
+        note = (f"access {access:.0f} B/object >= break-even "
+                f"{beas_bytes:.0f} B -> object store")
+    return ExchangePlacement(tier, beas_bytes, access, n,
+                             object_usd=object_usd, kv_usd=kv_usd,
+                             object_s=object_s, kv_s=kv_s, note=note)
+
+
+# ---------------------------------------------------------------------------
 # TPU extension: elastic (preemptible, fine-grained) vs reserved pods
 # ---------------------------------------------------------------------------
 

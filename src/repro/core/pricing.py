@@ -111,7 +111,17 @@ DYNAMODB_WRITE_UNIT_KIB = 1.0
 EFS = StoragePricing("efs", 0.0, 0.0, 0.03, 0.06, 0.30)
 S3_XREGION_USD_PER_GIB = 0.02             # cross-region transfer (Table 7)
 
-STORAGE_PRICING = {p.name: p for p in [S3_STANDARD, S3_EXPRESS, DYNAMODB, EFS]}
+# Memory-grade KV exchange tier (ElastiCache-serverless-class): cheap
+# requests, expensive bytes. Transfer fees dominate for bulk shuffles; the
+# per-GiB-hour capacity rent ($0.125/GiB-h = $90/GiB-mo) prices residency of
+# shuffle intermediates for the duration of a query. This is the tier whose
+# break-even against S3 Standard ``core.breakeven.exchange_beas`` computes.
+KV_MEMORY_USD_PER_GIB_H = 0.125
+KV_MEMORY = StoragePricing("kv-memory", 2.0e-7, 2.5e-7, 0.01, 0.04,
+                           KV_MEMORY_USD_PER_GIB_H * 30 * 24)
+
+STORAGE_PRICING = {p.name: p for p in [S3_STANDARD, S3_EXPRESS, DYNAMODB, EFS,
+                                       KV_MEMORY]}
 
 # ---------------------------------------------------------------------------
 # TPU v5e extension (framework target hardware)

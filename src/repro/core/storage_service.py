@@ -91,8 +91,22 @@ EFS_PROFILE = ServiceProfile(
     read_latency_q=(0.005, 0.008, 0.30),
     write_latency_q=(0.012, 0.022, 0.60))
 
+# Memory-grade KV exchange tier (ElastiCache/Momento-class): sub-millisecond
+# request latencies with a tight tail, per-client bandwidth comparable to S3
+# so byte-heavy shuffles gain nothing — only the per-request fixed latency
+# shrinks. Paired with ``pricing.KV_MEMORY`` (per-request + per-GiB-hour rent).
+KV_MEMORY_PROFILE = ServiceProfile(
+    "kv-memory",
+    read_bw_per_client=2.0 * GIB, write_bw_per_client=2.0 * GIB,
+    read_bw_ceiling=100.0 * GIB, write_bw_ceiling=100.0 * GIB,
+    max_clients=None,
+    read_iops=250000.0, write_iops=200000.0, iops_shards=False,
+    read_latency_q=(0.0004, 0.0012, 0.050),
+    write_latency_q=(0.0005, 0.0015, 0.060))
+
 PROFILES = {p.name: p for p in [
-    S3_STANDARD_PROFILE, S3_EXPRESS_PROFILE, DYNAMODB_PROFILE, EFS_PROFILE]}
+    S3_STANDARD_PROFILE, S3_EXPRESS_PROFILE, DYNAMODB_PROFILE, EFS_PROFILE,
+    KV_MEMORY_PROFILE]}
 
 
 def aggregated_throughput(profile: ServiceProfile, clients: int,
@@ -194,16 +208,50 @@ class RequestStats:
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
 
-    def cost(self, prices=pricing.S3_STANDARD) -> float:
+    def cost(self, prices=pricing.S3_STANDARD,
+             capacity_gib_s: float = 0.0) -> float:
         # Failures and retries are billed too (the paper's client hook counts
         # them); throttled requests are charged as reads conservatively.
-        return pricing.storage_request_cost(
+        # ``capacity_gib_s`` adds residency rent (GiB x seconds resident) for
+        # tiers billed per GiB-hour, e.g. the memory KV exchange tier.
+        usd = pricing.storage_request_cost(
             prices, self.reads + self.throttled + self.lists,
             self.writes, self.read_bytes, self.write_bytes)
+        if capacity_gib_s:
+            usd += pricing.storage_capacity_cost(
+                prices, 1.0, capacity_gib_s / 3600.0)
+        return usd
 
 
 class ThrottledError(RuntimeError):
     """Raised when the partition model rejects a request (HTTP 503 analog)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff + full jitter (paper cites Brooker [53]).
+
+    Factored out of ``ObjectStore.retrying_get`` so each exchange tier gets
+    its own profile: the object store tolerates multi-second 503 storms, the
+    memory KV tier has sub-millisecond medians so waiting 50 ms between
+    attempts would cost more than the request itself.
+    """
+
+    max_attempts: int = 6
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 5.0
+
+    def backoff_s(self, attempt: int) -> float:
+        return min(self.backoff_base_s * (2 ** attempt), self.backoff_cap_s)
+
+
+OBJECT_RETRY = RetryPolicy(max_attempts=6, backoff_base_s=0.05,
+                           backoff_cap_s=5.0)
+# The KV tier fails fast: tighter cap, fewer attempts — a throttled memory
+# store stays throttled; callers should respill to the object tier instead
+# of camping on backoff.
+KV_RETRY = RetryPolicy(max_attempts=4, backoff_base_s=0.005,
+                       backoff_cap_s=0.25)
 
 
 class ObjectStore:
@@ -212,6 +260,8 @@ class ObjectStore:
     Thread-safe; used concurrently by query-engine workers. ``clock`` supplies
     simulated time for the partition model (defaults to a step counter).
     """
+
+    tier = "object"
 
     def __init__(self, partition_model: Optional[PartitionModel] = None,
                  clock: Optional[Callable[[], float]] = None):
@@ -222,6 +272,9 @@ class ObjectStore:
         self.stats = RequestStats()
         self.partitions = partition_model
         self._clock = clock or (lambda: 0.0)
+        self.profile = S3_STANDARD_PROFILE
+        self.prices = pricing.S3_STANDARD
+        self.retry = OBJECT_RETRY
 
     # -- S3-shaped API ------------------------------------------------------
     def put(self, key: str, data: bytes) -> None:
@@ -290,19 +343,53 @@ class ObjectStore:
                 self.stats.throttled += 1
             raise ThrottledError(key)
 
-    def retrying_get(self, key: str, max_attempts: int = 6,
-                     backoff_base_s: float = 0.05,
+    def retrying_get(self, key: str, max_attempts: Optional[int] = None,
+                     backoff_base_s: Optional[float] = None,
                      sleep: Callable[[float], None] = lambda s: None) -> bytes:
         """Get with capped exponential backoff + full jitter (paper cites
-        Brooker [53]; the engine's stragglers come from exactly this loop)."""
+        Brooker [53]; the engine's stragglers come from exactly this loop).
+
+        Defaults come from the store's ``retry`` policy, so the KV tier
+        retries on its own (much tighter) schedule; explicit arguments
+        still override per call.
+        """
+        policy = self.retry
+        if max_attempts is not None or backoff_base_s is not None:
+            policy = dataclasses.replace(
+                policy,
+                max_attempts=(max_attempts if max_attempts is not None
+                              else policy.max_attempts),
+                backoff_base_s=(backoff_base_s if backoff_base_s is not None
+                                else policy.backoff_base_s))
         attempt = 0
         while True:
             try:
                 return self.get(key)
             except ThrottledError:
                 attempt += 1
-                if attempt >= max_attempts:
+                if attempt >= policy.max_attempts:
                     raise
                 with self._lock:
                     self.stats.retried += 1
-                sleep(min(backoff_base_s * (2 ** attempt), 5.0))
+                sleep(policy.backoff_s(attempt))
+
+
+class KVStore(ObjectStore):
+    """Memory-grade KV exchange tier (the fast-but-expensive shuffle path).
+
+    Same S3-shaped API and request metering as ``ObjectStore`` — workers are
+    tier-agnostic — but carries the ``kv-memory`` performance profile,
+    per-request + per-GiB-hour pricing (``pricing.KV_MEMORY``) and a
+    fail-fast retry policy. The coordinator's runtime model and the
+    optimizer's break-even placement (``core.breakeven.place_exchange``)
+    read those attributes rather than hard-coding tier constants.
+    """
+
+    tier = "kv"
+
+    def __init__(self, partition_model: Optional[PartitionModel] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        super().__init__(partition_model, clock)
+        self.profile = KV_MEMORY_PROFILE
+        self.prices = pricing.KV_MEMORY
+        self.retry = KV_RETRY

@@ -16,6 +16,7 @@ remaining cases where jit itself falls back to numpy.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
@@ -24,7 +25,9 @@ import numpy as np
 from repro.core import bench_profile, burst_planner, pricing, token_bucket
 from repro.core.elastic_pool import ColdStartModel, ElasticPool, ProvisionedPool
 from repro.core.scheduler import Fragment, Stage, StageScheduler, StragglerPolicy
-from repro.core.storage_service import ObjectStore, RequestStats
+from repro.core.storage_service import (KV_MEMORY_PROFILE, KVStore,
+                                        LatencyModel, ObjectStore,
+                                        RequestStats, S3_STANDARD_PROFILE)
 from repro.engine import columnar, optimizer, worker
 from repro.engine import compile as engine_compile
 from repro.engine.columnar import ColumnBatch
@@ -54,6 +57,36 @@ IO_THREADS = 32
 S3_READ_MEDIAN_S = 0.027
 S3_WRITE_MEDIAN_S = 0.040
 
+# Modeled request-latency distributions per exchange tier (the paper's
+# Fig 10 quantiles via ``storage_service.LatencyModel``); the fragment
+# duration model charges each storage round trip wave at the expected
+# max-of-m concurrent draws, so object-store tail latency — the paper's
+# dominant exchange cost — shows up in modeled runtimes, and the KV
+# tier's sub-millisecond barriers are what placement buys.
+_TIER_PROFILES = {"object": S3_STANDARD_PROFILE, "kv": KV_MEMORY_PROFILE}
+# Residency assumed for KV capacity rent when pricing a query's exchange:
+# shuffle intermediates live for (about) the query's runtime.
+
+
+@functools.lru_cache(maxsize=None)
+def _tier_latency(tier: str, op: str) -> LatencyModel:
+    prof = _TIER_PROFILES[tier]
+    return LatencyModel(prof.read_latency_q if op == "read"
+                        else prof.write_latency_q)
+
+
+def _request_barrier(tier: str, op: str, n: int) -> float:
+    """Modeled time a fragment blocks on ``n`` storage requests issued
+    over ``IO_THREADS`` threads: each wave of m concurrent requests
+    finishes at the expected max of m latency draws (~ the m/(m+1)
+    quantile of the tier's distribution). For n=1 this is the median."""
+    if n <= 0:
+        return 0.0
+    model = _tier_latency(tier, op)
+    waves = math.ceil(n / IO_THREADS)
+    m = min(n, IO_THREADS)
+    return waves * model.quantile(m / (m + 1.0))
+
 
 @dataclasses.dataclass
 class QueryResult:
@@ -70,6 +103,10 @@ class QueryResult:
     # Compiled-plan cache observability (jit backend; empty/False on numpy).
     plan_shape_hash: str = ""
     plan_cache_hit: bool = False
+    # Per-tier storage cost breakdown: {"object": usd, "kv": usd}. The kv
+    # entry prices requests + transfer + capacity rent over the query's
+    # runtime; summed they equal ``storage_cost_usd``.
+    exchange_cost_usd: dict = dataclasses.field(default_factory=dict)
 
 
 class Coordinator:
@@ -79,12 +116,16 @@ class Coordinator:
                  max_workers: int = 1024,
                  preboot: bool = True,
                  rng_seed: int = 0,
-                 backend: str = "jit"):
+                 backend: str = "jit",
+                 kv_store: Optional[ObjectStore] = None):
         if mode not in ("elastic", "provisioned"):
             raise ValueError(mode)
         if backend not in CPU_BYTES_PER_S_BY_BACKEND:
             raise ValueError(f"unknown backend {backend!r}")
         self.store = store
+        # Memory-grade exchange tier for kv-placed shuffles; base tables
+        # and results always stay on the object store.
+        self.kv_store = kv_store if kv_store is not None else KVStore()
         self.mode = mode
         self.backend = backend
         self.burst_aware = burst_aware
@@ -128,18 +169,22 @@ class Coordinator:
             # this plan's fragments will look up is already resident.
             shape_hash, cache_hit = engine_compile.PLAN_CACHE.lookup(plan)
         stats_before = dataclasses.replace(self.store.stats)
+        kv_stats_before = dataclasses.replace(self.kv_store.stats)
         # Per-query shuffle bitmap registry: writers record which
         # partitions they produced, missing_ok readers validate absences.
         registry = worker.ShuffleRegistry()
         stages, frag_counts = self._compile(plan, query_id, registry)
         results = self.scheduler.run(stages)
         return self.finalize(plan, query_id, frag_counts, results,
-                             stats_before, shape_hash, cache_hit)
+                             stats_before, shape_hash, cache_hit,
+                             kv_stats_before=kv_stats_before)
 
     def finalize(self, plan: QueryPlan, query_id: str,
                  frag_counts: dict[str, int], results: dict,
                  stats_before: RequestStats, shape_hash: str = "",
-                 cache_hit: bool = False) -> QueryResult:
+                 cache_hit: bool = False,
+                 kv_stats_before: Optional[RequestStats] = None
+                 ) -> QueryResult:
         """Merge the terminal pipeline's collect fragments and account
         runtime/cost from the per-stage results — shared by the
         single-query path above and the multi-query server (which runs
@@ -160,21 +205,37 @@ class Coordinator:
         # Coordinator function lifetime spans the query.
         faas_cost += pricing.lambda_cost(WORKER_MEM_GIB, runtime)
 
-        stats = dataclasses.replace(self.store.stats)
-        delta = RequestStats(**{
-            f.name: getattr(stats, f.name) - getattr(stats_before, f.name)
-            for f in dataclasses.fields(RequestStats)})
+        def _delta(now: RequestStats, before: RequestStats) -> RequestStats:
+            return RequestStats(**{
+                f.name: getattr(now, f.name) - getattr(before, f.name)
+                for f in dataclasses.fields(RequestStats)})
+
+        delta = _delta(dataclasses.replace(self.store.stats), stats_before)
+        kv_delta = _delta(
+            dataclasses.replace(self.kv_store.stats),
+            kv_stats_before if kv_stats_before is not None
+            else RequestStats())
+        # Per-tier exchange cost: the object tier bills requests +
+        # transfer; the kv tier additionally rents capacity for the
+        # shuffle bytes resident over the query's runtime.
+        object_usd = delta.cost(self.store.prices)
+        kv_usd = kv_delta.cost(
+            self.kv_store.prices,
+            capacity_gib_s=kv_delta.write_bytes / (1024.0 ** 3) * runtime)
+        merged_stats = dataclasses.replace(delta)
+        merged_stats.merge(kv_delta)
         return QueryResult(
             name=plan.name, result=merged, runtime_s=runtime,
             cumulated_worker_s=node_seconds, faas_cost_usd=faas_cost,
-            storage_cost_usd=delta.cost(), stage_metrics={
+            storage_cost_usd=object_usd + kv_usd, stage_metrics={
                 n: {"start": r.start_t, "end": r.end_t,
                     "workers": r.worker_count, "retried": r.retried_fragments}
                 for n, r in results.items()},
-            request_stats=delta, peak_workers=max(
+            request_stats=merged_stats, peak_workers=max(
                 r.worker_count for r in results.values()),
             stage_node_seconds=stage_nodes,
-            plan_shape_hash=shape_hash, plan_cache_hit=cache_hit)
+            plan_shape_hash=shape_hash, plan_cache_hit=cache_hit,
+            exchange_cost_usd={"object": object_usd, "kv": kv_usd})
 
     # ------------------------------------------------------------------
     def compile_stages(self, plan: QueryPlan, query_id: str,
@@ -195,6 +256,9 @@ class Coordinator:
         # readers — per compile, so concurrent queries reusing pipeline
         # names (every q12 names its pipelines the same) cannot collide.
         shuffle_spec: dict[str, int] = {}
+        # Exchange tier each pipeline's shuffle output rides, so consumer
+        # fragments read from the store their producers wrote to.
+        tier_spec: dict[str, str] = {}
         for pipe in plan.pipelines:
             n_frags, assignments = self._parallelism(pipe, frag_counts,
                                                      query_id, shuffle_spec)
@@ -203,7 +267,7 @@ class Coordinator:
             for i in range(n_frags):
                 spec = self._fragment_spec(plan, pipe, query_id, i,
                                            assignments, frag_counts,
-                                           shuffle_spec)
+                                           shuffle_spec, tier_spec)
                 frag = Fragment(fragment_id=i, work=None)
 
                 def work(s=spec, f=frag):
@@ -216,7 +280,8 @@ class Coordinator:
                     # move.
                     f.est_duration_s, f.input_bytes = self._estimate(s)
                     return worker.execute_fragment(self.store, s,
-                                                   registry=registry)
+                                                   registry=registry,
+                                                   kv_store=self.kv_store)
 
                 frag.work = work
                 fragments.append(frag)
@@ -262,7 +327,11 @@ class Coordinator:
     def _fragment_spec(self, plan: QueryPlan, pipe: Pipeline, query_id: str,
                        i: int, assignments: list[list[str]],
                        frag_counts: dict[str, int],
-                       shuffle_spec: dict[str, int]) -> worker.FragmentSpec:
+                       shuffle_spec: dict[str, int],
+                       tier_spec: Optional[dict[str, str]] = None
+                       ) -> worker.FragmentSpec:
+        tier_spec = tier_spec if tier_spec is not None else {}
+        read_tier = read_tier2 = "object"
         if isinstance(pipe.input, TableInput):
             read_keys = assignments[i]
             columns = pipe.input.columns
@@ -273,6 +342,7 @@ class Coordinator:
                          for w in range(frag_counts[src])]
             columns = None
             missing_ok = True   # writers skip empty shuffle partitions
+            read_tier = tier_spec.get(src, "object")
         read_keys2: list[str] = []
         columns2 = None
         missing_ok2 = True
@@ -294,11 +364,14 @@ class Coordinator:
             src2 = pipe.input2.from_pipeline
             read_keys2 = [worker.shuffle_key(query_id, src2, w, i)
                           for w in range(frag_counts[src2])]
+            read_tier2 = tier_spec.get(src2, "object")
         if isinstance(pipe.output, ShuffleOutput):
             shuffle_spec[pipe.name] = pipe.output.partitions
+            tier_spec[pipe.name] = pipe.output.tier
             output = {"type": "shuffle",
                       "partition_by": pipe.output.partition_by,
-                      "partitions": pipe.output.partitions}
+                      "partitions": pipe.output.partitions,
+                      "tier": pipe.output.tier}
         else:
             output = {"type": "collect"}
         return worker.FragmentSpec(
@@ -308,20 +381,39 @@ class Coordinator:
             backend=self.backend, missing_ok=missing_ok,
             partitioning=pipe.partitioning,
             partitioning2=pipe.partitioning2, columns2=columns2,
-            missing_ok2=missing_ok2)
+            missing_ok2=missing_ok2,
+            read_tier=read_tier, read_tier2=read_tier2)
+
+    def _tier_store(self, tier: str) -> ObjectStore:
+        return self.kv_store if tier == "kv" else self.store
 
     def _estimate(self, spec: worker.FragmentSpec) -> tuple[float, float]:
         """Model-time duration of a fragment: burst-limited network transfer
-        + request latencies (threaded) + CPU scan throughput."""
+        + per-tier request-latency barriers + CPU scan throughput. Reads
+        and writes are charged per wave at the expected max of the
+        concurrent draws on the tier each side actually rides
+        (``_request_barrier``), so object-store exchange tail latency —
+        the paper's dominant e2e term — is what KV placement removes."""
         in_bytes = 0
-        for k in spec.read_keys + spec.read_keys2:
-            try:
-                in_bytes += self.store.size(k)
-            except KeyError:
-                pass  # shuffle object not yet written; sized at runtime
-        reads = len(spec.read_keys) + len(spec.read_keys2)
+        req = 0.0
+        for keys, tier in ((spec.read_keys, spec.read_tier),
+                           (spec.read_keys2, spec.read_tier2)):
+            if not keys:
+                continue
+            st = self._tier_store(tier)
+            for k in keys:
+                try:
+                    in_bytes += st.size(k)
+                except KeyError:
+                    pass  # shuffle object not yet written; sized at runtime
+            req += _request_barrier(tier, "read", len(keys))
+        out = spec.output
+        if out.get("type") == "shuffle":
+            req += _request_barrier(out.get("tier", "object"), "write",
+                                    out["partitions"])
+        else:
+            req += _request_barrier("object", "write", 1)
         net = token_bucket.transfer_time(float(in_bytes), self.bucket)
-        req = reads * S3_READ_MEDIAN_S / IO_THREADS + S3_WRITE_MEDIAN_S
         cpu_bw = _cpu_bytes_per_s(self.backend)   # measured when available
         cpu = 2.0 * in_bytes / cpu_bw  # ~2x decompression expansion
         return net + req + cpu + 0.02, float(in_bytes)

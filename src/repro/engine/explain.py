@@ -23,7 +23,8 @@ from repro.engine.plans import (CollectOutput, Pipeline, QueryPlan,
 
 def _fmt_output(out) -> str:
     if isinstance(out, ShuffleOutput):
-        return f"shuffle(by={out.partition_by}, partitions={out.partitions})"
+        return (f"shuffle(by={out.partition_by}, "
+                f"partitions={out.partitions}, tier={out.tier})")
     if isinstance(out, CollectOutput):
         return "collect"
     return repr(out)

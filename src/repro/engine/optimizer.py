@@ -77,7 +77,7 @@ import dataclasses
 import math
 from typing import Optional
 
-from repro.core import bench_profile
+from repro.core import bench_profile, breakeven
 from repro.engine import logical
 from repro.engine.logical import (Aggregate, Filter, Join, LogicalError,
                                   LogicalQuery, Project, Scan, Udf)
@@ -329,6 +329,12 @@ class _Pipe:
     # Per-column dtype widths (bytes/value) under the current schema,
     # None when unknown; drives width-aware size estimates.
     col_widths: Optional[dict[str, int]] = None
+    # Estimated producing-fragment count (shuffle WRITERS): known exactly
+    # for pipelines fed by a shuffle or a declared-partitioned table,
+    # None for plain scans (the coordinator derives parallelism from the
+    # object count, invisible here). Exchange-tier placement needs it
+    # because request count scales with writers x partitions.
+    writers_est: Optional[int] = None
 
     def width_sum(self, cols) -> Optional[float]:
         if self.col_widths is None:
@@ -340,13 +346,15 @@ class _Pipe:
 class _Lowering:
     def __init__(self, query: LogicalQuery, stats: Optional[Stats],
                  backend: str, bench_path: Optional[str],
-                 trace: list[str], elide: bool = True):
+                 trace: list[str], elide: bool = True,
+                 exchange_tiers: str = "auto"):
         self.query = query
         self.stats = stats or Stats()
         self.backend = backend
         self.bench_path = bench_path
         self.trace = trace
         self.elide = elide
+        self.exchange_tiers = exchange_tiers
         self.pipelines: list[Pipeline] = []
         self._names: dict[str, int] = {}
 
@@ -406,6 +414,48 @@ class _Lowering:
             f"partition)")
         return n
 
+    def _shuffle_out(self, key: str, partitions: int,
+                     est_bytes: Optional[float],
+                     writers_est: Optional[int],
+                     what: str) -> ShuffleOutput:
+        """Build a ``ShuffleOutput`` with its exchange tier chosen by the
+        break-even model (``core.breakeven.place_exchange``): estimated
+        shuffle bytes spread over writers x partitions round trips against
+        the measured tier throughputs from the ``tiered_exchange`` bench
+        section. Small hot shuffles (combines) land on the KV tier, bulk
+        row shuffles stay on the object store; no hand rules. A ``None``
+        break-even or a missing size estimate falls back to the object
+        store with a trace note — never a crash."""
+        if self.exchange_tiers in ("object", "kv"):
+            self.trace.append(f"exchange_tier: {what} -> "
+                              f"{self.exchange_tiers} (forced)")
+            return ShuffleOutput(key, partitions, tier=self.exchange_tiers)
+        writers = writers_est
+        if writers is None:
+            if est_bytes is not None:
+                # Mirror the coordinator's parallelism heuristic: one
+                # fragment per target-partition of input.
+                target = self._cpu_bw() * TARGET_PARTITION_SECONDS
+                writers = max(1, min(MAX_SHUFFLE_PARTITIONS,
+                                     math.ceil(est_bytes / target)))
+            else:
+                writers = DEFAULT_SHUFFLE_PARTITIONS
+        sec = bench_profile.section("tiered_exchange", path=self.bench_path)
+        placed = breakeven.place_exchange(
+            est_bytes, writers, partitions,
+            object_bytes_per_s=sec.get("object_exchange_bytes_per_s"),
+            kv_bytes_per_s=sec.get("kv_exchange_bytes_per_s"))
+        if placed.access_bytes is None or placed.object_usd is None:
+            self.trace.append(
+                f"exchange_tier: {what} -> {placed.tier} ({placed.note})")
+        else:
+            self.trace.append(
+                f"exchange_tier: {what} -> {placed.tier} ({placed.note}; "
+                f"{placed.n_objects} round trips, modeled object "
+                f"${placed.object_usd:.6f}/{placed.object_s * 1e3:.1f}ms "
+                f"vs kv ${placed.kv_usd:.6f}/{placed.kv_s * 1e3:.1f}ms)")
+        return ShuffleOutput(key, partitions, tier=placed.tier)
+
     # -- tree walk ----------------------------------------------------------
     def build(self, node) -> _Pipe:
         if isinstance(node, Scan):
@@ -436,7 +486,8 @@ class _Lowering:
                          base_name=f"scan_{node.table}",
                          schema=cols, est_bytes=est,
                          part=part, input_part=part,
-                         col_widths=col_widths)
+                         col_widths=col_widths,
+                         writers_est=None if part is None else part[1])
         if isinstance(node, Filter):
             pipe = self.build(node.child)
             pipe.ops.append({"op": "filter", "expr": node.predicate})
@@ -529,8 +580,12 @@ class _Lowering:
                  if e is not None]
         parts = self._fanout(max(known) if known else None,
                              f"join on {probe_on}")
-        probe_name = self._close(probe, ShuffleOutput(probe_on, parts))
-        build_name = self._close(build, ShuffleOutput(build_on, parts))
+        probe_name = self._close(probe, self._shuffle_out(
+            probe_on, parts, probe.est_bytes, probe.writers_est,
+            f"row shuffle on {probe_on}"))
+        build_name = self._close(build, self._shuffle_out(
+            build_on, parts, build.est_bytes, build.writers_est,
+            f"build shuffle on {build_on}"))
         ops = [{"op": "hash_join", "left_key": probe_on,
                 "right_key": build_on}]
         # The logical contract, regardless of build side.
@@ -557,7 +612,8 @@ class _Lowering:
                      # values equal the probe key's.
                      part=(node.left_on, parts),
                      input_part=(probe_on, parts),
-                     col_widths=_merge_widths(left, right, node.right_on))
+                     col_widths=_merge_widths(left, right, node.right_on),
+                     writers_est=parts)
         return pipe
 
     def _try_elide_join(self, node: Join, left: _Pipe,
@@ -639,8 +695,9 @@ class _Lowering:
                     f"directly (declared hash({build_on}) % {n} layout; "
                     f"both row shuffles elided)")
             else:
-                build_name = self._close(build,
-                                         ShuffleOutput(build_on, n))
+                build_name = self._close(build, self._shuffle_out(
+                    build_on, n, build.est_bytes, build.writers_est,
+                    f"build shuffle on {build_on}"))
                 build_input = ShuffleInput(build_name)
                 self.trace.append(
                     f"shuffle_elision: probe-side row shuffle on "
@@ -664,6 +721,7 @@ class _Lowering:
             probe.col_widths = _merge_widths(left, right, node.right_on)
             probe.part = (node.left_on, n)
             probe.relied = True
+            probe.writers_est = n
             return probe
         self.trace.append(
             f"shuffle_elision: join on {node.left_on} kept ("
@@ -709,7 +767,9 @@ class _Lowering:
             parts = 1
             self.trace.append(f"shuffle_fanout: global-aggregate combine "
                               f"on {combine_key} -> 1 partition (forced)")
-        name = self._close(pipe, ShuffleOutput(combine_key, parts))
+        name = self._close(pipe, self._shuffle_out(
+            combine_key, parts, est_out, pipe.writers_est,
+            f"combine shuffle on {combine_key}"))
         final = [[a.name, logical.FINAL_AGG_FN[a.fn], a.name]
                  for a in node.aggs]
         self.trace.append(
@@ -724,7 +784,8 @@ class _Lowering:
                      # by it — downstream joins/aggs on it can elide.
                      part=(combine_key, parts),
                      input_part=(combine_key, parts),
-                     col_widths=_agg_widths(pipe, node))
+                     col_widths=_agg_widths(pipe, node),
+                     writers_est=parts)
 
     def _try_elide_combine(self, node: Aggregate,
                            pipe: _Pipe) -> Optional[_Pipe]:
@@ -834,17 +895,25 @@ def _fmt_part(part: Optional[tuple[str, int]]) -> str:
 
 def lower(query: LogicalQuery, stats: Optional[Stats] = None,
           backend: str = "numpy", bench_path: Optional[str] = None,
-          shuffle_elision: bool = True) -> tuple[QueryPlan, PlanReport]:
+          shuffle_elision: bool = True,
+          exchange_tiers: str = "auto") -> tuple[QueryPlan, PlanReport]:
     """Optimize and lower a logical query. Returns the physical plan plus
     the report of applied rules (see ``engine.explain``).
     ``shuffle_elision=False`` disables the partitioning-property elision
     rules — parity tests and benchmarks lower both variants from the same
-    logical query."""
+    logical query. ``exchange_tiers`` selects shuffle placement:
+    ``"auto"`` (default) picks per shuffle by break-even analysis,
+    ``"object"``/``"kv"`` force every shuffle onto one tier (the
+    ``tiered_exchange`` benchmark lowers all three variants from one
+    logical query)."""
+    if exchange_tiers not in ("auto", "object", "kv"):
+        raise ValueError(f"exchange_tiers must be 'auto', 'object' or "
+                         f"'kv', got {exchange_tiers!r}")
     trace: list[str] = []
     root = _pushdown(query.root, [], trace)
     root = _prune(root, None, trace)
     low = _Lowering(query, stats, backend, bench_path, trace,
-                    elide=shuffle_elision)
+                    elide=shuffle_elision, exchange_tiers=exchange_tiers)
     pipe = low.build(root)
     low._close(pipe, CollectOutput())
     plan = QueryPlan(query.name, low.pipelines)
@@ -854,9 +923,11 @@ def lower(query: LogicalQuery, stats: Optional[Stats] = None,
 
 def plan(query: LogicalQuery, stats: Optional[Stats] = None,
          backend: str = "numpy", bench_path: Optional[str] = None,
-         shuffle_elision: bool = True) -> QueryPlan:
+         shuffle_elision: bool = True,
+         exchange_tiers: str = "auto") -> QueryPlan:
     """``lower`` without the report — the one-call path for query
     builders."""
     return lower(query, stats=stats, backend=backend,
                  bench_path=bench_path,
-                 shuffle_elision=shuffle_elision)[0]
+                 shuffle_elision=shuffle_elision,
+                 exchange_tiers=exchange_tiers)[0]

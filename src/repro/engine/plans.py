@@ -60,11 +60,18 @@ class ShuffleInput:
     type: str = "shuffle"
 
 
+# Exchange tiers a shuffle can ride (core.storage_service stores carry the
+# matching ``tier`` attribute): the object store is the bulk default, "kv"
+# is the memory-grade fast tier chosen by break-even placement.
+EXCHANGE_TIERS = ("object", "kv")
+
+
 @dataclasses.dataclass
 class ShuffleOutput:
     partition_by: str
     partitions: int
     type: str = "shuffle"
+    tier: str = "object"
 
 
 @dataclasses.dataclass
@@ -312,6 +319,11 @@ class QueryPlan:
                 errors.extend(
                     f"pipeline {p.name!r}: {m}"
                     for m in _check_partitioning(p, by_name))
+            if isinstance(p.output, ShuffleOutput) \
+                    and p.output.tier not in EXCHANGE_TIERS:
+                errors.append(
+                    f"pipeline {p.name!r}: unknown exchange tier "
+                    f"{p.output.tier!r} (expected one of {EXCHANGE_TIERS})")
             schema = _pipeline_schema(p, schemas, errors)
             schemas[p.name] = schema
             if isinstance(p.output, ShuffleOutput) and schema is not None \
@@ -351,7 +363,8 @@ class QueryPlan:
             inp2 = _input_from(p["input2"]) if p.get("input2") else None
             if p["output"]["type"] == "shuffle":
                 out = ShuffleOutput(p["output"]["partition_by"],
-                                    p["output"]["partitions"])
+                                    p["output"]["partitions"],
+                                    tier=p["output"].get("tier", "object"))
             else:
                 out = CollectOutput()
             pipelines.append(Pipeline(p["name"], inp, p["ops"], out,
@@ -524,8 +537,12 @@ def canonical_plan(plan: "QueryPlan") -> tuple[dict, dict]:
             ops.insert(0, {"op": "hash_join", **p.join})
         cops, lits = canonicalize_ops(ops, lits)
         if isinstance(p.output, ShuffleOutput):
+            # The tier is part of the canonical shape: a cached compiled
+            # plan routed to the wrong exchange tier would read shuffle
+            # objects that were never written there.
             out = {"type": "shuffle", "by": p.output.partition_by,
-                   "partitions": p.output.partitions}
+                   "partitions": p.output.partitions,
+                   "tier": p.output.tier}
         else:
             out = {"type": "collect"}
         pipes.append({"name": pipe_names[p.name],

@@ -70,6 +70,11 @@ class FragmentSpec:
     partitioning2: dict | None = None
     columns2: list[str] | None = None
     missing_ok2: bool = True            # build side defaults to shuffle reads
+    # Exchange tier each shuffle-read side rides ("object" | "kv", from the
+    # producing pipeline's ``ShuffleOutput.tier``); the output dict carries
+    # its own "tier". Table scans and collect results are always object-tier.
+    read_tier: str = "object"
+    read_tier2: str = "object"
 
 
 @dataclasses.dataclass
@@ -158,10 +163,13 @@ def _read_side(store: ObjectStore, keys: list[str], columns,
 
 def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
                    metrics: FragmentMetrics,
-                   registry: Optional[ShuffleRegistry]) -> list[dict]:
+                   registry: Optional[ShuffleRegistry],
+                   build_store: Optional[ObjectStore] = None) -> list[dict]:
     """Resolve the op chain to executable form: legacy ``spec.join``
     becomes a leading ``hash_join`` op, build-side reads resolve into the
-    join op specs, broadcast side-inputs load into UDF kwargs."""
+    join op specs, broadcast side-inputs load into UDF kwargs.
+    ``build_store`` is the exchange tier the build-side shuffle rode
+    (defaults to ``store``; broadcasts always load from ``store``)."""
     ops = list(spec.ops)
     if spec.join is not None:
         ops.insert(0, {"op": "hash_join", **spec.join})
@@ -169,7 +177,8 @@ def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
     if join_ops:
         # Build side: shuffle objects are missing-tolerant (writers skip
         # empty partitions); direct table-partition reads are not.
-        build = _read_side(store, spec.read_keys2, spec.columns2, metrics,
+        build = _read_side(build_store or store, spec.read_keys2,
+                           spec.columns2, metrics,
                            missing_ok=spec.missing_ok2, registry=registry)
         _validate_partitioning(build, spec.partitioning2, spec,
                                side="build")
@@ -213,19 +222,32 @@ def _validate_partitioning(batch: ColumnBatch, part: Optional[dict],
 
 
 def execute_fragment(store: ObjectStore, spec: FragmentSpec,
-                     registry: Optional[ShuffleRegistry] = None
+                     registry: Optional[ShuffleRegistry] = None,
+                     kv_store: Optional[ObjectStore] = None
                      ) -> FragmentMetrics:
+    """Execute one fragment. ``store`` is the object tier (base tables,
+    collect results and object-tier shuffles); ``kv_store`` is the
+    memory-grade exchange tier for shuffle sides/outputs whose spec says
+    ``"kv"``. Without a ``kv_store`` every tier falls back to ``store``
+    (standalone fragments and legacy callers), keeping writes and reads
+    consistently routed."""
+    def tier_store(tier: str) -> ObjectStore:
+        return kv_store if tier == "kv" and kv_store is not None else store
+
     metrics = FragmentMetrics()
-    batch = _read_side(store, spec.read_keys, spec.columns, metrics,
+    batch = _read_side(tier_store(spec.read_tier), spec.read_keys,
+                       spec.columns, metrics,
                        missing_ok=spec.missing_ok, registry=registry)
     _validate_partitioning(batch, spec.partitioning, spec)
-    ops = _normalize_ops(store, spec, metrics, registry)
+    ops = _normalize_ops(store, spec, metrics, registry,
+                         build_store=tier_store(spec.read_tier2))
 
     out = spec.output
     if out["type"] == "shuffle":
         parts = engine_compile.run_pipeline_partition(
             batch, ops, out["partition_by"], out["partitions"],
             backend=spec.backend)
+        wstore = tier_store(out.get("tier", "object"))
         bitmap = 0
         for part, sel in enumerate(parts):
             metrics.rows_out += sel.num_rows
@@ -233,8 +255,8 @@ def execute_fragment(store: ObjectStore, spec: FragmentSpec,
                 continue   # readers tolerate the missing object
             bitmap |= 1 << part
             data = columnar.serialize_frame(sel)
-            store.put(shuffle_key(spec.query_id, spec.pipeline,
-                                  spec.fragment, part), data)
+            wstore.put(shuffle_key(spec.query_id, spec.pipeline,
+                                   spec.fragment, part), data)
             metrics.write_requests += 1
             metrics.write_bytes += len(data)
         metrics.partitions_written = bitmap

@@ -98,8 +98,12 @@ class ResultCache:
     the validation the shuffle readers themselves do.
     """
 
-    def __init__(self, store: ObjectStore, maxsize: int = 32):
+    def __init__(self, store: ObjectStore, maxsize: int = 32,
+                 kv_store: Optional[ObjectStore] = None):
         self.store = store
+        # Exchange tier for kv-placed shuffle objects: bitmap validation
+        # must consult the store a pipeline's writers actually wrote to.
+        self.kv_store = kv_store
         self.maxsize = maxsize
         self._entries: dict = {}        # key -> entry dict (insert-ordered)
         self.hits = 0
@@ -112,16 +116,24 @@ class ResultCache:
 
     def put(self, key, query_id: str, terminal: str, n_frags: int,
             table_etags: dict[str, int],
-            registry: worker.ShuffleRegistry) -> None:
+            registry: worker.ShuffleRegistry,
+            shuffle_tiers: Optional[dict[str, str]] = None) -> None:
         bitmaps = {bkey: registry.bitmap(*bkey)
                    for bkey in list(registry._bitmaps)}
         self._entries.pop(key, None)
         self._entries[key] = {
             "query_id": query_id, "terminal": terminal, "n_frags": n_frags,
             "table_etags": dict(table_etags), "bitmaps": bitmaps,
+            "tiers": dict(shuffle_tiers or {}),
         }
         while len(self._entries) > self.maxsize:
             self._entries.pop(next(iter(self._entries)))
+
+    def _shuffle_store(self, entry: dict, pipeline: str) -> ObjectStore:
+        tier = entry.get("tiers", {}).get(pipeline, "object")
+        if tier == "kv" and self.kv_store is not None:
+            return self.kv_store
+        return self.store
 
     def _valid(self, entry: dict) -> bool:
         for k, tag in entry["table_etags"].items():
@@ -138,12 +150,13 @@ class ResultCache:
             except KeyError:
                 return False
         for (_, pipeline, writer), bm in entry["bitmaps"].items():
+            st = self._shuffle_store(entry, pipeline)
             p = 0
             while bm >> p:
                 if (bm >> p) & 1:
                     sk = worker.shuffle_key(qid, pipeline, writer, p)
                     try:
-                        self.store.etag(sk)
+                        st.etag(sk)
                     except KeyError:
                         return False
                 p += 1
@@ -215,7 +228,9 @@ class QueryServer:
         self.admission = admission or AdmissionConfig(
             capacity=max(256.0, 4.0 * worker_budget),
             refill_per_s=2.0 * worker_budget)
-        self.result_cache = ResultCache(store) if result_cache else None
+        self.result_cache = ResultCache(
+            store, kv_store=self.coordinator.kv_store) \
+            if result_cache else None
         self._seq = 0
 
     def register_table(self, name: str, keys: list[str]) -> None:
@@ -273,6 +288,7 @@ class QueryServer:
                 continue
             plan.validate()
             stats_before = dataclasses.replace(self.store.stats)
+            kv_stats_before = dataclasses.replace(coord.kv_store.stats)
             table_etags = self._table_etags(plan)
             registry = worker.ShuffleRegistry()
             stages, frag_counts = coord.compile_stages(plan, qid, registry)
@@ -280,7 +296,9 @@ class QueryServer:
                            submit_t=req.submit_t, tenant=req.tenant)
             prepared.append((req, plan, qid, job, {
                 "frag_counts": frag_counts, "registry": registry,
-                "stats_before": stats_before, "table_etags": table_etags,
+                "stats_before": stats_before,
+                "kv_stats_before": kv_stats_before,
+                "table_etags": table_etags,
                 "cache_key": cache_key, "shape_hash": shape_hash,
                 "plan_hit": plan_hit}))
 
@@ -314,13 +332,17 @@ class QueryServer:
                 continue
             qres = coord.finalize(plan, qid, ctx["frag_counts"],
                                   job.results, ctx["stats_before"],
-                                  ctx["shape_hash"], ctx["plan_hit"])
+                                  ctx["shape_hash"], ctx["plan_hit"],
+                                  kv_stats_before=ctx["kv_stats_before"])
             if self.result_cache is not None:
                 terminal = plan.pipelines[-1]
                 self.result_cache.put(
                     ctx["cache_key"], qid, terminal.name,
                     ctx["frag_counts"][terminal.name], ctx["table_etags"],
-                    ctx["registry"])
+                    ctx["registry"],
+                    shuffle_tiers={
+                        p.name: p.output.tier for p in plan.pipelines
+                        if isinstance(p.output, plans.ShuffleOutput)})
             served.append(ServedQuery(
                 request=req, result=qres, query_id=qid,
                 submit_t=job.submit_t, admit_t=job.admit_t,

@@ -218,6 +218,16 @@ def test_serving_parity_and_plan_cache_hits(serving_store):
     assert report.plan_cache_hit_rate == pytest.approx(0.75)
     assert not report.queries[0].plan_cache_hit
     assert all(s.plan_cache_hit for s in report.queries[1:])
+    # Every served query carries the per-tier exchange cost breakdown:
+    # q12's combine rides the KV tier, the bulk row shuffles stay on the
+    # object store, and the split sums back to the storage bill.
+    for served in report.queries:
+        res = served.result
+        assert set(res.exchange_cost_usd) == {"object", "kv"}
+        assert res.exchange_cost_usd["object"] > 0.0
+        assert res.exchange_cost_usd["kv"] > 0.0
+        assert sum(res.exchange_cost_usd.values()) == \
+            pytest.approx(res.storage_cost_usd)
     # Both tenants served; nobody denied at the default budget.
     assert set(report.admission) == {"tenant0", "tenant1"}
     assert all(v["admitted"] >= 1 for v in report.admission.values())
@@ -279,10 +289,16 @@ def test_result_cache_bitmap_validation(serving_store):
         while bm >> p:
             if (bm >> p) & 1:
                 set_keys.append(
-                    worker_mod.shuffle_key(qid, pipeline, writer, p))
+                    (pipeline,
+                     worker_mod.shuffle_key(qid, pipeline, writer, p)))
             p += 1
     assert set_keys, "q12 must produce shuffle partitions"
-    store.delete(set_keys[0])
+    # Shuffles may ride either exchange tier; delete the partition from
+    # the store that actually holds it so the etag probe sees it gone.
+    pipeline, key = set_keys[0]
+    tier = entry["tiers"].get(pipeline, "object")
+    owner = srv.coordinator.kv_store if tier == "kv" else store
+    owner.delete(key)
     miss = srv.serve([QueryRequest(queries.q12_logical(year_lo=YEAR + 7))])
     assert miss.result_cache_hits == 0
     assert srv.result_cache.invalidated >= 1
@@ -314,3 +330,29 @@ def test_bench_profile_section_accessor(tmp_path):
     assert bench_profile.section("concurrent_serving", path=p) == \
         {"speedup": 2.0}
     assert bench_profile.section("missing", path=p) == {}
+
+
+def test_bench_profile_stale_section_warns_once(tmp_path):
+    """A profile file that exists but lacks the requested section is stale
+    (the caller's benchmark was added after the last run): warn once per
+    section name, return the documented fallback. A missing file stays
+    silent — fresh checkouts have no BENCH_engine.json at all."""
+    import warnings
+
+    from repro.core import bench_profile
+
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({"planning": {"x": 1.0}}))
+    bench_profile.clear_cache()
+    fb = {"object_exchange_bytes_per_s": 1.0}
+    with pytest.warns(RuntimeWarning, match="no 'tiered_exchange' section"):
+        assert bench_profile.section("tiered_exchange", path=p,
+                                     fallback=fb) == fb
+    # Second probe for the same section is silent (warn-once).
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert bench_profile.section("tiered_exchange", path=p) == {}
+        # Missing file: silent, regardless of section.
+        assert bench_profile.section(
+            "anything", path=tmp_path / "absent.json") == {}
+    bench_profile.clear_cache()

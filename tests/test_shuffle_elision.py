@@ -345,7 +345,7 @@ def _run(store, keys, q, backend, elide, qid):
     stats = optimizer.Stats.from_store(store, c.table_keys)
     plan = optimizer.plan(q, stats=stats, backend=backend,
                           shuffle_elision=elide)
-    return plan, c.execute(plan, qid)
+    return plan, c.execute(plan, qid), c
 
 
 @pytest.mark.parametrize("backend", ["numpy", "jit"])
@@ -361,7 +361,7 @@ def test_elision_parity_both_backends(elision_store, backend, partitioned):
     results = {}
     for elide in (True, False):
         qid = f"par-{backend}-{partitioned}-{elide}"
-        plan, res = _run(store, keys, q, backend, elide, qid)
+        plan, res, coord = _run(store, keys, q, backend, elide, qid)
         got = {int(k): (s, int(c)) for k, s, c in zip(
             res.result["l_orderkey"].tolist(),
             res.result["revenue"].tolist(),
@@ -371,7 +371,10 @@ def test_elision_parity_both_backends(elision_store, backend, partitioned):
         for k in ref:
             assert got[k][0] == pytest.approx(ref[k][0], rel=rtol)
             assert got[k][1] == ref[k][1]
-        shuffle_objs = store.list(f"shuffle/{qid}/")
+        # Shuffle objects may land on either exchange tier (the small
+        # combine shuffle rides the KV store); spy across both.
+        shuffle_objs = (store.list(f"shuffle/{qid}/")
+                        + coord.kv_store.list(f"shuffle/{qid}/"))
         if elide and partitioned:
             # Spy: EVERY shuffle was elided — not one object written.
             assert shuffle_objs == []
@@ -543,8 +546,8 @@ def test_random_prepartitioned_e2e_parity(seed):
                               name=f"rand-{seed}")
     out = {}
     for elide in (True, False):
-        _, res = _run(store, keys, q, "numpy", elide,
-                      f"rand-{seed}-{elide}")
+        _, res, _c = _run(store, keys, q, "numpy", elide,
+                          f"rand-{seed}-{elide}")
         out[elide] = {int(k): (s, int(c)) for k, s, c in zip(
             res.result["l_orderkey"].tolist(),
             res.result["revenue"].tolist(),

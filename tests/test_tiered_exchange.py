@@ -1,0 +1,321 @@
+"""Tiered exchange substrate: memory-grade KV tier, break-even shuffle
+placement, per-tier routing + cost accounting, and the factored-out retry
+policies.
+
+The break-even rule is the exchange analog of the paper's BEAS (Table 8):
+an access smaller than the break-even size rides the KV tier (its request
+fee + median latency undercut the object store's), a larger one stays on
+the object store (KV's per-byte transfer + capacity rent dominate)."""
+import math
+
+import pytest
+
+from repro.core import breakeven, pricing
+from repro.core import storage_service as ss
+from repro.core.storage_service import KVStore, ObjectStore, RequestStats
+from repro.engine import columnar, datagen, optimizer, plans, queries
+from repro.engine.coordinator import Coordinator
+
+MIB = 1024.0 ** 2
+GIB = 1024.0 ** 3
+
+
+# ---------------------------------------------------------------------------
+# exchange_beas / place_exchange (satellite: None edge + degenerate shuffles)
+# ---------------------------------------------------------------------------
+
+def test_exchange_beas_default_is_finite_positive():
+    b = breakeven.exchange_beas()
+    assert b is not None and math.isfinite(b)
+    # Sanity band: small combine partitions (~128 KiB) should sit below it,
+    # bulk row-shuffle partitions (MiBs) above it.
+    assert 64 * 1024 < b < 4 * MIB
+
+
+def test_exchange_beas_none_when_kv_requests_cost_more():
+    """If KV's fixed per-access cost exceeds the object store's, no access
+    is small enough for KV to break even -> None, never a negative size."""
+    pricey = pricing.StoragePricing(
+        "kv-pricey", usd_per_read=1e-3, usd_per_write=1e-3,
+        usd_per_gib_read=0.01, usd_per_gib_write=0.04,
+        usd_per_gib_month=pricing.KV_MEMORY.usd_per_gib_month)
+    assert breakeven.exchange_beas(kv_prices=pricey) is None
+
+
+def test_exchange_beas_inf_when_kv_has_no_byte_premium():
+    """Free KV bytes (no transfer fee, no rent) -> KV wins at every size."""
+    free_bytes = pricing.StoragePricing(
+        "kv-free-bytes", usd_per_read=pricing.KV_MEMORY.usd_per_read,
+        usd_per_write=pricing.KV_MEMORY.usd_per_write,
+        usd_per_gib_read=0.0, usd_per_gib_write=0.0,
+        usd_per_gib_month=0.0)
+    assert breakeven.exchange_beas(kv_prices=free_bytes) == math.inf
+
+
+def test_place_exchange_none_estimate_falls_back_to_object():
+    p = breakeven.place_exchange(None, 8, 8)
+    assert p.tier == "object"
+    assert p.access_bytes is None
+    assert "fallback" in p.note and "object" in p.note
+
+
+def test_place_exchange_zero_bytes_degenerate():
+    """A 0-byte shuffle is pure fixed cost -> KV (requests are cheaper)."""
+    p = breakeven.place_exchange(0.0, 1, 1)
+    assert p.tier == "kv"
+    assert p.access_bytes == 0.0
+    assert p.n_objects == 1
+
+
+def test_place_exchange_fanout_one_uses_whole_size():
+    """writers=1, partitions=1: access size == the full shuffle bytes."""
+    small = breakeven.place_exchange(64 * 1024, 1, 1)
+    assert small.tier == "kv" and small.access_bytes == 64 * 1024
+    big = breakeven.place_exchange(256 * MIB, 1, 1)
+    assert big.tier == "object" and big.access_bytes == 256 * MIB
+
+
+def test_place_exchange_fanout_shrinks_access_size():
+    """The same bytes spread over many round trips means smaller objects:
+    fan-out can flip a shuffle from object to kv."""
+    total = 8 * MIB
+    coarse = breakeven.place_exchange(total, 1, 1)
+    fine = breakeven.place_exchange(total, 16, 16)
+    assert coarse.tier == "object"
+    assert fine.tier == "kv"
+    assert fine.n_objects == 256
+    assert fine.access_bytes == pytest.approx(total / 256)
+
+
+def test_place_exchange_none_beas_places_object_with_note():
+    pricey = pricing.StoragePricing(
+        "kv-pricey", usd_per_read=1e-3, usd_per_write=1e-3,
+        usd_per_gib_read=0.01, usd_per_gib_write=0.04,
+        usd_per_gib_month=pricing.KV_MEMORY.usd_per_gib_month)
+    p = breakeven.place_exchange(1024.0, 4, 4, kv_prices=pricey)
+    assert p.tier == "object"
+    assert p.beas_bytes is None
+    assert "never" in p.note
+
+
+def test_place_exchange_records_model_inputs():
+    p = breakeven.place_exchange(1.0 * MIB, 8, 1)
+    assert p.tier == "kv"
+    assert p.n_objects == 8
+    # Both tier models are evaluated and preserved for explain/trace.
+    assert p.object_usd > p.kv_usd > 0.0
+    assert p.object_s > p.kv_s > 0.0
+    assert f"{p.beas_bytes:.0f}" in p.note
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy factoring (satellite: KV gets a tighter profile)
+# ---------------------------------------------------------------------------
+
+def test_retry_policies_per_tier():
+    assert ObjectStore().retry is ss.OBJECT_RETRY
+    assert KVStore().retry is ss.KV_RETRY
+    assert ss.KV_RETRY.max_attempts < ss.OBJECT_RETRY.max_attempts
+    assert ss.KV_RETRY.backoff_base_s < ss.OBJECT_RETRY.backoff_base_s
+    assert ss.KV_RETRY.backoff_cap_s < ss.OBJECT_RETRY.backoff_cap_s
+
+
+def test_retry_policy_backoff_doubles_then_caps():
+    pol = ss.RetryPolicy(max_attempts=6, backoff_base_s=0.05,
+                         backoff_cap_s=0.3)
+    assert pol.backoff_s(1) == pytest.approx(0.1)
+    assert pol.backoff_s(2) == pytest.approx(0.2)
+    assert pol.backoff_s(5) == pytest.approx(0.3)  # capped
+
+
+def test_kv_retrying_get_uses_tight_schedule():
+    from repro.core.storage_service import PartitionModel, ThrottledError
+    clock = {"t": 0.0}
+    kv = KVStore(PartitionModel(), clock=lambda: clock["t"])
+    kv.put("k", b"v")
+    # Saturate the admission window; with a frozen clock every further
+    # read throttles, so retrying_get exhausts its schedule.
+    throttled = 0
+    for _ in range(12000):
+        try:
+            kv.get("k")
+        except ThrottledError:
+            throttled += 1
+    assert throttled > 0
+    slept = []
+    with pytest.raises(ThrottledError):
+        kv.retrying_get("k", sleep=slept.append)
+    assert len(slept) == ss.KV_RETRY.max_attempts - 1
+    assert slept == [ss.KV_RETRY.backoff_s(i + 1) for i in range(len(slept))]
+    assert all(s <= ss.KV_RETRY.backoff_cap_s for s in slept)
+    # Explicit arguments still override the store policy.
+    slept2 = []
+    with pytest.raises(ThrottledError):
+        kv.retrying_get("k", max_attempts=2, sleep=slept2.append)
+    assert len(slept2) == 1
+
+
+def test_kv_store_identity():
+    kv = KVStore()
+    assert kv.tier == "kv"
+    assert kv.prices is pricing.KV_MEMORY
+    assert kv.profile.name == "kv-memory"
+    # Same metered API: requests and bytes are accounted identically.
+    kv.put("a", b"xyz")
+    assert kv.get("a") == b"xyz"
+    assert kv.stats.writes == kv.stats.reads == 1
+
+
+def test_request_stats_cost_capacity_rent():
+    st = RequestStats(reads=10, writes=10, read_bytes=int(GIB),
+                      write_bytes=int(GIB))
+    base = st.cost(pricing.KV_MEMORY)
+    rented = st.cost(pricing.KV_MEMORY, capacity_gib_s=3600.0)
+    assert rented - base == pytest.approx(
+        pricing.KV_MEMORY.usd_per_gib_month / (30 * 24))
+
+
+# ---------------------------------------------------------------------------
+# Plan surface: tier field, validation, canonical hash
+# ---------------------------------------------------------------------------
+
+def _q12_plan(**kw):
+    return optimizer.plan(queries.q12_logical(), backend="jit", **kw)
+
+
+def test_tier_survives_json_roundtrip():
+    plan = _q12_plan()
+    tiers = {p.name: p.output.tier for p in plan.pipelines
+             if isinstance(p.output, plans.ShuffleOutput)}
+    assert "kv" in tiers.values()  # the small combine rides KV
+    back = plans.QueryPlan.from_json(plan.to_json())
+    for p in back.pipelines:
+        if isinstance(p.output, plans.ShuffleOutput):
+            assert p.output.tier == tiers[p.name]
+
+
+def test_validate_rejects_unknown_tier():
+    plan = _q12_plan()
+    for p in plan.pipelines:
+        if isinstance(p.output, plans.ShuffleOutput):
+            object.__setattr__(p.output, "tier", "tape")
+            break
+    with pytest.raises(ValueError, match="unknown exchange tier"):
+        plan.validate()
+
+
+def test_plan_shape_hash_covers_tier():
+    """Tier placement changes the physical artifact a compiled plan binds
+    to -> it must be part of the shape hash (compiled-plan cache key)."""
+    auto = _q12_plan()
+    forced = _q12_plan(exchange_tiers="object")
+    assert plans.plan_shape_hash(auto) != plans.plan_shape_hash(forced)
+    assert plans.plan_shape_hash(auto) == plans.plan_shape_hash(_q12_plan())
+
+
+def test_forced_modes_and_trace_lines():
+    _, report = optimizer.lower(queries.q12_logical(), exchange_tiers="kv")
+    assert any("exchange_tier:" in r and "(forced)" in r
+               for r in report.rules)
+    _, auto = optimizer.lower(queries.q12_logical())
+    tier_lines = [r for r in auto.rules if r.startswith("exchange_tier:")]
+    assert any("break-even" in ln and "-> kv" in ln for ln in tier_lines)
+    assert any("no size estimate -> object store (fallback)" in ln
+               for ln in tier_lines)
+    with pytest.raises(ValueError):
+        optimizer.lower(queries.q12_logical(), exchange_tiers="ssd")
+
+
+# ---------------------------------------------------------------------------
+# Runtime routing + per-tier cost accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_store():
+    store = ObjectStore()
+    keys = {
+        "lineitem": datagen.load_table(store, "lineitem", 20000, 8),
+        "orders": datagen.load_table(store, "orders", 5000, 4),
+    }
+    return store, keys
+
+
+def _coord(store, keys):
+    c = Coordinator(store)
+    c.register_table("lineitem", keys["lineitem"])
+    c.register_table("orders", keys["orders"])
+    return c
+
+
+def test_kv_shuffle_routes_to_kv_store(small_store):
+    store, keys = small_store
+    c = _coord(store, keys)
+    plan = optimizer.plan(queries.q12_logical(), backend="jit")
+    kv_pipes = [p.name for p in plan.pipelines
+                if isinstance(p.output, plans.ShuffleOutput)
+                and p.output.tier == "kv"]
+    assert kv_pipes, "q12's combine shuffle should ride KV"
+    res = c.execute(plan, query_id="route-kv")
+    assert res.result.num_rows > 0
+    # The KV pipes' partitions live in the KV store, not the object store.
+    for name in kv_pipes:
+        kv_objs = c.kv_store.list(f"shuffle/route-kv/{name}/")
+        assert kv_objs, f"pipe {name} wrote no KV shuffle objects"
+        assert store.list(f"shuffle/route-kv/{name}/") == []
+    assert c.kv_store.stats.writes > 0 and c.kv_store.stats.reads > 0
+
+
+def test_exchange_cost_breakdown(small_store):
+    store, keys = small_store
+    c = _coord(store, keys)
+    res = c.execute(optimizer.plan(queries.q12_logical(), backend="jit"),
+                    query_id="cost-breakdown")
+    assert set(res.exchange_cost_usd) == {"object", "kv"}
+    assert res.exchange_cost_usd["object"] > 0.0
+    assert res.exchange_cost_usd["kv"] > 0.0
+    assert sum(res.exchange_cost_usd.values()) == \
+        pytest.approx(res.storage_cost_usd)
+
+
+def test_forced_object_execution_matches_auto(small_store):
+    """Tier placement is a physical property: forcing everything onto the
+    object store must not change results, only where bytes travel."""
+    store, keys = small_store
+
+    def run(tiers, qid):
+        c = _coord(store, keys)
+        res = c.execute(optimizer.plan(queries.q12_logical(), backend="jit",
+                                       exchange_tiers=tiers), query_id=qid)
+        return c, res
+
+    c_obj, obj = run("object", "force-obj")
+    c_auto, auto = run("auto", "force-auto")
+    assert c_obj.kv_store.stats.writes == 0
+    assert obj.exchange_cost_usd["kv"] == 0.0
+    got = dict(zip(obj.result["l_shipmode"].tolist(),
+                   obj.result["high_line_count"].tolist()))
+    want = dict(zip(auto.result["l_shipmode"].tolist(),
+                    auto.result["high_line_count"].tolist()))
+    assert got == want
+    # The placed plan's modeled runtime should not be worse: KV round
+    # trips replace object-store request barriers on the hot combine.
+    assert auto.runtime_s <= obj.runtime_s
+
+
+def test_worker_falls_back_without_kv_store(small_store):
+    """Legacy callers that pass no kv_store still execute kv-tier plans:
+    every tier routes to the base store, writes and reads consistently."""
+    from repro.engine import worker as worker_mod
+    store, keys = small_store
+    plan = optimizer.plan(queries.q12_logical(), backend="numpy")
+    c = _coord(store, keys)
+    res = c.execute(plan, query_id="with-kv")
+    spec = worker_mod.FragmentSpec(
+        query_id="solo", pipeline="p", fragment=0,
+        read_keys=[keys["lineitem"][0]], read_keys2=[],
+        columns=["l_orderkey"],
+        ops=[{"op": "project", "columns": ["l_orderkey"]}],
+        output={"type": "collect"}, read_tier="kv")
+    out = worker_mod.execute_fragment(store, spec)  # no kv_store passed
+    assert out.rows_out > 0
+    assert res.result.num_rows > 0
