@@ -15,7 +15,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
-REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange"
+# Chaos suite: fault-injection determinism + adaptive execution under
+# injected faults (speculation idempotency, targeted repair, demotion).
+python -m pytest -q tests/test_chaos.py tests/test_adaptive.py
+
+REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange,adaptive_chaos"
 python -m benchmarks.check_regression \
     --require-section "$REQUIRED_SECTIONS" "$@"
 

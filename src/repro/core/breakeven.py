@@ -405,6 +405,26 @@ def place_exchange(shuffle_bytes: Optional[float], writers: int,
                              object_s=object_s, kv_s=kv_s, note=note)
 
 
+def place_exchange_from_bench(shuffle_bytes: Optional[float], writers: int,
+                              partitions: int, *,
+                              bench_path=None, **kw) -> ExchangePlacement:
+    """``place_exchange`` fed with the *measured* per-tier exchange
+    throughputs from the committed benchmark profile (the
+    ``tiered_exchange`` section), falling back to the service profiles'
+    per-client bandwidth when no measurement exists.
+
+    Shared by lowering-time placement (``engine.optimizer``) and runtime
+    re-placement at stage boundaries (``engine.adaptive``), so both make
+    the decision from the same calibrated inputs.
+    """
+    from repro.core import bench_profile
+    sec = bench_profile.section("tiered_exchange", path=bench_path) or {}
+    return place_exchange(
+        shuffle_bytes, writers, partitions,
+        object_bytes_per_s=sec.get("object_exchange_bytes_per_s"),
+        kv_bytes_per_s=sec.get("kv_exchange_bytes_per_s"), **kw)
+
+
 # ---------------------------------------------------------------------------
 # TPU extension: elastic (preemptible, fine-grained) vs reserved pods
 # ---------------------------------------------------------------------------

@@ -1,0 +1,127 @@
+"""Seeded fault-injection harness (chaos mode).
+
+The paper's variability section (§4.6, Table 5) and the shuffle-hardening
+layer both exist because real serverless runs see invocation-tail
+stragglers, throttled requests, and lost writes. This module injects those
+faults deterministically so the adaptive execution layer
+(``engine.adaptive``) can be tested and *gated* against them:
+
+* **slow fragments** — a lognormal slowdown multiplier applied to a
+  fragment's modeled duration (``StageScheduler`` consults the policy);
+* **dropped shuffle writes** — a PUT is billed and believed written by the
+  worker (its partition bitmap records it) but never lands in storage,
+  exactly the lost-write case ``worker.ShuffleRegistry`` detects;
+* **throttled requests** — a GET raises ``ThrottledError`` (HTTP 503
+  analog) on its first attempt; the store's retry loop absorbs it.
+
+Every decision is a pure function of ``(seed, identity)`` — the storage
+key or the ``(stage, fragment, attempt)`` triple — hashed with
+``zlib.crc32``, never Python's salted ``hash`` and never a shared RNG
+stream. That makes the fault schedule independent of draw *order* and
+stable across processes: an adaptive and a static execution of the same
+query see the identical faults, so modeled-runtime comparisons (the
+``adaptive_chaos`` benchmark's p99 gate) are fair and reproducible.
+
+Wiring: assign a policy to ``ObjectStore.chaos`` / ``KVStore.chaos``
+(drops + throttles) and pass it to the coordinator / ``StageScheduler``
+(slowdowns). Drops and throttles apply only to keys under
+``scope_prefix`` (default ``"shuffle/"``): base tables and collect
+results are never corrupted, mirroring the paper's observation that the
+*exchange* is where faults concentrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+
+
+def _unit(seed: int, *parts) -> float:
+    """Deterministic uniform(0, 1) from a seed and an identity tuple."""
+    data = "|".join(str(p) for p in parts).encode()
+    h = zlib.crc32(data, seed & 0xFFFFFFFF) & 0xFFFFFFFF
+    return h / 2.0 ** 32
+
+
+def _probit(p: float) -> float:
+    # Local import avoids a cycle (storage_service imports nothing from
+    # here, but keep the dependency one-way and explicit).
+    from repro.core.storage_service import _probit as probit
+    return probit(min(max(p, 1e-9), 1.0 - 1e-9))
+
+
+@dataclasses.dataclass
+class ChaosPolicy:
+    """Deterministic, seeded fault injection for one execution.
+
+    ``slow_prob`` of fragments draw a lognormal slowdown multiplier
+    (``exp(slow_mu + slow_sigma * z)``, clamped >= 1); ``drop_prob`` of
+    first-attempt shuffle PUTs are silently lost (subsequent PUTs of the
+    same key land — the fault is transient, so duplicate re-execution
+    heals it); ``throttle_prob`` of first-attempt shuffle GETs raise
+    ``ThrottledError`` (retries succeed). Injected-fault counters are
+    kept for observability and assertions.
+    """
+
+    seed: int = 0
+    slow_prob: float = 0.1
+    slow_mu: float = 1.2            # log-mean of the slowdown multiplier
+    slow_sigma: float = 0.4
+    drop_prob: float = 0.05
+    throttle_prob: float = 0.0
+    scope_prefix: str = "shuffle/"
+
+    def __post_init__(self):
+        self._offered_puts: set[str] = set()
+        self._offered_gets: set[str] = set()
+        self.slows = 0
+        self.drops = 0
+        self.throttles = 0
+
+    # -- fragment slowdowns -------------------------------------------------
+    def slow_multiplier(self, stage: str, fragment: int,
+                        attempt: int = 0) -> float:
+        """Slowdown multiplier for one fragment attempt (>= 1.0).
+
+        Keyed by (stage, fragment, attempt): a speculative duplicate
+        (attempt 1) draws independently of the original, so speculation
+        can actually win the race.
+        """
+        if _unit(self.seed, "slow", stage, fragment, attempt) \
+                >= self.slow_prob:
+            return 1.0
+        z = _probit(_unit(self.seed, "slowmag", stage, fragment, attempt))
+        self.slows += 1
+        return max(1.0, float(math.exp(self.slow_mu + self.slow_sigma * z)))
+
+    # -- storage faults -----------------------------------------------------
+    def drop_write(self, key: str) -> bool:
+        """True iff this PUT should be silently lost. Only the FIRST put
+        of a scoped key can drop — a re-put (duplicate execution, repair)
+        always lands, modeling a transient loss."""
+        if not key.startswith(self.scope_prefix):
+            return False
+        if key in self._offered_puts:
+            return False
+        self._offered_puts.add(key)
+        if _unit(self.seed, "drop", key) < self.drop_prob:
+            self.drops += 1
+            return True
+        return False
+
+    def throttle(self, key: str, t: float = 0.0) -> bool:
+        """True iff this GET should be rejected (503). First attempt per
+        scoped key only; the store's retry policy absorbs it."""
+        if not key.startswith(self.scope_prefix):
+            return False
+        if key in self._offered_gets:
+            return False
+        self._offered_gets.add(key)
+        if _unit(self.seed, "throttle", key) < self.throttle_prob:
+            self.throttles += 1
+            return True
+        return False
+
+    def stats(self) -> dict:
+        return {"slows": self.slows, "drops": self.drops,
+                "throttles": self.throttles}

@@ -43,6 +43,11 @@ class StageResult:
     results: list[object]
     retried_fragments: int = 0
     node_seconds: float = 0.0
+    # Speculative duplicate executions (engine.adaptive): launched when a
+    # fragment crossed the lognormal expected-max barrier, won when the
+    # duplicate finished first. Zero under the base scheduler.
+    speculative_launched: int = 0
+    speculative_won: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,11 +73,15 @@ class StageScheduler:
     seed."""
 
     def __init__(self, pool, policy: StragglerPolicy = StragglerPolicy(),
-                 straggler_prob: float = 0.02, rng_seed: int = 0):
+                 straggler_prob: float = 0.02, rng_seed: int = 0,
+                 chaos=None):
         self.pool = pool
         self.policy = policy
         self.straggler_prob = straggler_prob
         self._rng = np.random.default_rng(rng_seed)
+        # Optional fault injection (core.chaos.ChaosPolicy): multiplies
+        # fragment durations by a per-(stage, fragment) lognormal draw.
+        self.chaos = chaos
 
     def run(self, stages: Sequence[Stage], t0: float = 0.0
             ) -> dict[str, StageResult]:
@@ -108,6 +117,9 @@ class StageScheduler:
         for i, (frag, w) in enumerate(zip(stage.fragments, workers)):
             results[i] = frag.work()
             dur = self._noisy_duration(frag.est_duration_s)
+            if self.chaos is not None:
+                dur *= self.chaos.slow_multiplier(stage.name,
+                                                  frag.fragment_id)
             timeout = max(self.policy.timeout_s(frag.input_bytes),
                           self.policy.slowdown_factor * frag.est_duration_s)
             start = w.ready_at
@@ -184,8 +196,8 @@ class MultiQueryScheduler(StageScheduler):
 
     def __init__(self, pool, policy: StragglerPolicy = StragglerPolicy(),
                  budget: int = 64, straggler_prob: float = 0.02,
-                 rng_seed: int = 0):
-        super().__init__(pool, policy, straggler_prob, rng_seed)
+                 rng_seed: int = 0, chaos=None):
+        super().__init__(pool, policy, straggler_prob, rng_seed, chaos=chaos)
         self.budget = budget
 
     def run_jobs(self, jobs: Sequence[QueryJob], admitter=None

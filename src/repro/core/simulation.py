@@ -33,6 +33,13 @@ class SimClock:
         """Advance time without events (used by sequential simulations)."""
         self._now += dt
 
+    def peek(self) -> Optional[float]:
+        """Time of the next pending event, or None when the queue is empty."""
+        return self._events[0][0] if self._events else None
+
+    def pending(self) -> int:
+        return len(self._events)
+
     def run(self, until: Optional[float] = None) -> float:
         while self._events:
             t, _, fn = self._events[0]

@@ -264,7 +264,8 @@ class ObjectStore:
     tier = "object"
 
     def __init__(self, partition_model: Optional[PartitionModel] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 chaos=None):
         self._objects: dict[str, bytes] = {}
         self._etags: dict[str, int] = {}
         self._put_seq = 0
@@ -275,10 +276,21 @@ class ObjectStore:
         self.profile = S3_STANDARD_PROFILE
         self.prices = pricing.S3_STANDARD
         self.retry = OBJECT_RETRY
+        # Optional fault injection (core.chaos.ChaosPolicy); assignable
+        # after construction so a shared store can be perturbed per run.
+        self.chaos = chaos
 
     # -- S3-shaped API ------------------------------------------------------
     def put(self, key: str, data: bytes) -> None:
         self._admit(key, write=True, nbytes=len(data))
+        if self.chaos is not None and self.chaos.drop_write(key):
+            # Lost write: billed and acknowledged to the caller (its
+            # partition bitmap will claim the object exists) but never
+            # stored — the fault the shuffle-hardening layer detects.
+            with self._lock:
+                self.stats.writes += 1
+                self.stats.write_bytes += len(data)
+            return
         with self._lock:
             self._objects[key] = bytes(data)
             self._put_seq += 1
@@ -297,6 +309,10 @@ class ObjectStore:
             return self._etags[key]
 
     def get(self, key: str, byte_range: Optional[tuple[int, int]] = None) -> bytes:
+        if self.chaos is not None and self.chaos.throttle(key, self._clock()):
+            with self._lock:
+                self.stats.throttled += 1
+            raise ThrottledError(key)
         with self._lock:
             if key not in self._objects:
                 # A GET on a missing key is still a billed request with

@@ -6,8 +6,20 @@ CoV: coefficient of variation (std/mean, in %) within a region.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
+
+
+def cov_sigma(cov_percent: float) -> float:
+    """Lognormal sigma matching a target CoV (in %).
+
+    CoV^2 = exp(sigma^2) - 1  =>  sigma = sqrt(ln(1 + CoV^2)). Shared by
+    the suite-runtime sampler below and the adaptive layer's straggler
+    barrier (``engine.adaptive``), so both speak the same tail model.
+    """
+    cov = cov_percent / 100.0
+    return float(np.sqrt(np.log1p(cov ** 2)))
 
 
 def median_ratio(runtimes: np.ndarray, base_runtimes: np.ndarray) -> float:
@@ -49,9 +61,12 @@ def sample_suite_runtimes(region: str, cold: bool, runs: int,
     CoV^2 = exp(sigma^2) - 1  =>  sigma = sqrt(ln(1 + CoV^2)).
     """
     prof = REGIONS[region]
-    cov = (prof.cold_cov if cold else prof.warm_cov) / 100.0
-    sigma = float(np.sqrt(np.log1p(cov ** 2)))
-    rng = np.random.default_rng(seed + hash((region, cold)) % 2 ** 16)
+    sigma = cov_sigma(prof.cold_cov if cold else prof.warm_cov)
+    # Stable digest, NOT hash(): builtin hash of strings is salted by
+    # PYTHONHASHSEED, which silently changed the per-(region, cold)
+    # stream between processes and made chaos/bench runs irreproducible.
+    stream = zlib.crc32(f"{region}|{int(cold)}".encode()) % 2 ** 16
+    rng = np.random.default_rng(seed + stream)
     med = base_median_s * prof.median_scale
     mu = np.log(med)
     return rng.lognormal(mu, sigma, size=runs)

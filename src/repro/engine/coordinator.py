@@ -107,6 +107,15 @@ class QueryResult:
     # entry prices requests + transfer + capacity rent over the query's
     # runtime; summed they equal ``storage_cost_usd``.
     exchange_cost_usd: dict = dataclasses.field(default_factory=dict)
+    # Adaptive-execution observability (engine.adaptive; zero/empty under
+    # the static coordinator): stage-boundary plan revisions taken, and
+    # speculative duplicate fragments launched / won across all stages.
+    # ``adaptive_trace`` holds the human-readable ``adaptive:`` decision
+    # lines that ``explain`` renders.
+    replans: int = 0
+    speculative_launched: int = 0
+    speculative_won: int = 0
+    adaptive_trace: list = dataclasses.field(default_factory=list)
 
 
 class Coordinator:
@@ -117,7 +126,8 @@ class Coordinator:
                  preboot: bool = True,
                  rng_seed: int = 0,
                  backend: str = "jit",
-                 kv_store: Optional[ObjectStore] = None):
+                 kv_store: Optional[ObjectStore] = None,
+                 chaos=None):
         if mode not in ("elastic", "provisioned"):
             raise ValueError(mode)
         if backend not in CPU_BYTES_PER_S_BY_BACKEND:
@@ -139,8 +149,12 @@ class Coordinator:
                                         boot_s=0.0 if preboot else 45.0)
             self.bucket = token_bucket.ec2_bucket(
                 pricing.EC2_CATALOG["c6g.xlarge"])
+        # Optional fault injection (core.chaos.ChaosPolicy): the scheduler
+        # draws per-fragment slowdowns from it; callers attach the same
+        # policy to the stores for drops/throttles.
+        self.chaos = chaos
         self.scheduler = StageScheduler(self.pool, StragglerPolicy(),
-                                        rng_seed=rng_seed)
+                                        rng_seed=rng_seed, chaos=chaos)
         self.table_keys: dict[str, list[str]] = {}
 
     def register_table(self, name: str, keys: list[str]) -> None:
@@ -183,8 +197,9 @@ class Coordinator:
                  frag_counts: dict[str, int], results: dict,
                  stats_before: RequestStats, shape_hash: str = "",
                  cache_hit: bool = False,
-                 kv_stats_before: Optional[RequestStats] = None
-                 ) -> QueryResult:
+                 kv_stats_before: Optional[RequestStats] = None,
+                 adaptive_trace: Optional[list] = None,
+                 replans: int = 0) -> QueryResult:
         """Merge the terminal pipeline's collect fragments and account
         runtime/cost from the per-stage results — shared by the
         single-query path above and the multi-query server (which runs
@@ -224,18 +239,28 @@ class Coordinator:
             capacity_gib_s=kv_delta.write_bytes / (1024.0 ** 3) * runtime)
         merged_stats = dataclasses.replace(delta)
         merged_stats.merge(kv_delta)
+        spec_launched = sum(getattr(r, "speculative_launched", 0)
+                            for r in results.values())
+        spec_won = sum(getattr(r, "speculative_won", 0)
+                       for r in results.values())
         return QueryResult(
             name=plan.name, result=merged, runtime_s=runtime,
             cumulated_worker_s=node_seconds, faas_cost_usd=faas_cost,
             storage_cost_usd=object_usd + kv_usd, stage_metrics={
                 n: {"start": r.start_t, "end": r.end_t,
-                    "workers": r.worker_count, "retried": r.retried_fragments}
+                    "duration": r.end_t - r.start_t,
+                    "workers": r.worker_count,
+                    "retried": r.retried_fragments,
+                    "speculative": getattr(r, "speculative_launched", 0)}
                 for n, r in results.items()},
             request_stats=merged_stats, peak_workers=max(
                 r.worker_count for r in results.values()),
             stage_node_seconds=stage_nodes,
             plan_shape_hash=shape_hash, plan_cache_hit=cache_hit,
-            exchange_cost_usd={"object": object_usd, "kv": kv_usd})
+            exchange_cost_usd={"object": object_usd, "kv": kv_usd},
+            replans=replans, speculative_launched=spec_launched,
+            speculative_won=spec_won,
+            adaptive_trace=list(adaptive_trace or []))
 
     # ------------------------------------------------------------------
     def compile_stages(self, plan: QueryPlan, query_id: str,
@@ -260,33 +285,48 @@ class Coordinator:
         # fragments read from the store their producers wrote to.
         tier_spec: dict[str, str] = {}
         for pipe in plan.pipelines:
-            n_frags, assignments = self._parallelism(pipe, frag_counts,
-                                                     query_id, shuffle_spec)
-            frag_counts[pipe.name] = n_frags
-            fragments = []
-            for i in range(n_frags):
-                spec = self._fragment_spec(plan, pipe, query_id, i,
-                                           assignments, frag_counts,
-                                           shuffle_spec, tier_spec)
-                frag = Fragment(fragment_id=i, work=None)
-
-                def work(s=spec, f=frag):
-                    # Estimate at execution time, not compile time:
-                    # shuffle intermediates do not exist when the plan
-                    # compiles, but by a stage's start its producers
-                    # have written, so the scheduler (which reads the
-                    # estimate after running the work) models
-                    # shuffle-heavy stages on the bytes they REALLY
-                    # move.
-                    f.est_duration_s, f.input_bytes = self._estimate(s)
-                    return worker.execute_fragment(self.store, s,
-                                                   registry=registry,
-                                                   kv_store=self.kv_store)
-
-                frag.work = work
-                fragments.append(frag)
-            stages.append(Stage(pipe.name, fragments, deps=pipe.deps()))
+            stages.append(self._compile_pipeline(plan, pipe, query_id,
+                                                 registry, frag_counts,
+                                                 shuffle_spec, tier_spec))
         return stages, frag_counts
+
+    def _compile_pipeline(self, plan: QueryPlan, pipe: Pipeline,
+                          query_id: str,
+                          registry: Optional[worker.ShuffleRegistry],
+                          frag_counts: dict[str, int],
+                          shuffle_spec: dict[str, int],
+                          tier_spec: dict[str, str]) -> Stage:
+        """Compile ONE pipeline into a schedulable stage, recording its
+        fragment count / shuffle fan-out / tier in the shared per-compile
+        maps. Factored out of ``_compile`` so the adaptive executor can
+        compile stage-at-a-time, revising the not-yet-compiled rest of
+        the plan between stages."""
+        n_frags, assignments = self._parallelism(pipe, frag_counts,
+                                                 query_id, shuffle_spec)
+        frag_counts[pipe.name] = n_frags
+        fragments = []
+        for i in range(n_frags):
+            spec = self._fragment_spec(plan, pipe, query_id, i,
+                                       assignments, frag_counts,
+                                       shuffle_spec, tier_spec)
+            frag = Fragment(fragment_id=i, work=None)
+
+            def work(s=spec, f=frag):
+                # Estimate at execution time, not compile time:
+                # shuffle intermediates do not exist when the plan
+                # compiles, but by a stage's start its producers
+                # have written, so the scheduler (which reads the
+                # estimate after running the work) models
+                # shuffle-heavy stages on the bytes they REALLY
+                # move.
+                f.est_duration_s, f.input_bytes = self._estimate(s)
+                return worker.execute_fragment(self.store, s,
+                                               registry=registry,
+                                               kv_store=self.kv_store)
+
+            frag.work = work
+            fragments.append(frag)
+        return Stage(pipe.name, fragments, deps=pipe.deps())
 
     def _parallelism(self, pipe: Pipeline, frag_counts: dict[str, int],
                      query_id: str, shuffle_spec: dict[str, int]

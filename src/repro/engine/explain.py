@@ -71,8 +71,31 @@ def format_physical(plan: QueryPlan) -> str:
     return "\n".join(format_pipeline(p) for p in plan.pipelines)
 
 
+def format_adaptive(result) -> str:
+    """Render a ``QueryResult``'s adaptive-execution section: the
+    ``adaptive:`` decision lines recorded at stage boundaries by
+    ``engine.adaptive``, the revision/speculation counters, and per-stage
+    timings. Under the static coordinator the section shows zero
+    revisions — the before/after transcript in docs/ARCHITECTURE.md is
+    exactly this rendering."""
+    lines = ["adaptive execution", "=================="]
+    lines += [f"- {ln}" for ln in result.adaptive_trace] \
+        or ["- (no revisions)"]
+    lines.append(f"counters: replans={result.replans} "
+                 f"speculative_launched={result.speculative_launched} "
+                 f"speculative_won={result.speculative_won}")
+    lines.append("stage timings")
+    for name, m in result.stage_metrics.items():
+        lines.append(f"  {name}: start={m['start']:.3f}s "
+                     f"end={m['end']:.3f}s "
+                     f"duration={m['duration']:.3f}s "
+                     f"workers={m['workers']} "
+                     f"speculative={m.get('speculative', 0)}")
+    return "\n".join(lines)
+
+
 def explain(query: LogicalQuery, stats: Optional[optimizer.Stats] = None,
-            backend: str = "jit") -> str:
+            backend: str = "jit", result=None) -> str:
     from repro.engine import compile as engine_compile
     from repro.engine import plans as plans_mod
 
@@ -95,6 +118,10 @@ def explain(query: LogicalQuery, stats: Optional[optimizer.Stats] = None,
     sections += [f"- {r}" for r in report.rules] or ["- (none)"]
     sections += ["", "physical plan", "=============",
                  format_physical(plan)]
+    if result is not None:
+        # Post-execution view: what the adaptive executor actually did
+        # to this plan at run time (pass the returned QueryResult).
+        sections += ["", format_adaptive(result)]
     return "\n".join(sections)
 
 

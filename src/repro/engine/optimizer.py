@@ -143,6 +143,24 @@ class Stats:
 DEFAULT_COLUMN_WIDTH = 8
 
 
+def derive_fanout(est_bytes: Optional[float], backend: str,
+                  bench_path: Optional[str] = None) -> int:
+    """Size-based shuffle fan-out: one partition is about
+    ``TARGET_PARTITION_SECONDS`` of work at the measured backend
+    throughput, clamped to [1, MAX_SHUFFLE_PARTITIONS].
+
+    Module-level because two layers make the same decision: lowering
+    (``_Lowering._fanout``, from estimates) and the adaptive executor
+    (``engine.adaptive``, from bytes observed at a stage boundary).
+    """
+    if est_bytes is None:
+        return DEFAULT_SHUFFLE_PARTITIONS
+    bw = bench_profile.cpu_bytes_per_s(
+        backend, FALLBACK_CPU_BYTES_PER_S[backend], path=bench_path)
+    return max(1, min(MAX_SHUFFLE_PARTITIONS,
+                      math.ceil(est_bytes / (bw * TARGET_PARTITION_SECONDS))))
+
+
 @dataclasses.dataclass
 class PlanReport:
     """What the optimizer did: the rewritten logical tree plus one line
@@ -404,9 +422,8 @@ class _Lowering:
             self.trace.append(f"shuffle_fanout: {what} -> {n} partitions "
                               f"(no stats; default)")
             return n
-        target = self._cpu_bw() * TARGET_PARTITION_SECONDS
-        n = max(1, min(MAX_SHUFFLE_PARTITIONS,
-                       math.ceil(est_bytes / target)))
+        n = derive_fanout(est_bytes, self.backend,
+                          bench_path=self.bench_path)
         self.trace.append(
             f"shuffle_fanout: {what} -> {n} partitions "
             f"(~{est_bytes / MIB:.1f} MiB at "
@@ -440,11 +457,8 @@ class _Lowering:
                                      math.ceil(est_bytes / target)))
             else:
                 writers = DEFAULT_SHUFFLE_PARTITIONS
-        sec = bench_profile.section("tiered_exchange", path=self.bench_path)
-        placed = breakeven.place_exchange(
-            est_bytes, writers, partitions,
-            object_bytes_per_s=sec.get("object_exchange_bytes_per_s"),
-            kv_bytes_per_s=sec.get("kv_exchange_bytes_per_s"))
+        placed = breakeven.place_exchange_from_bench(
+            est_bytes, writers, partitions, bench_path=self.bench_path)
         if placed.access_bytes is None or placed.object_usd is None:
             self.trace.append(
                 f"exchange_tier: {what} -> {placed.tier} ({placed.note})")

@@ -190,6 +190,17 @@ def _pipeline_schema(pipe: "Pipeline", schemas: dict,
     return cols
 
 
+def pipeline_schemas(plan: "QueryPlan") -> dict[str, Optional[list]]:
+    """Output schema of every pipeline (name -> ordered columns, or None
+    when unknowable, e.g. past a UDF). The adaptive executor uses this to
+    decide whether a runtime build-side flip can emit its key-restoring
+    rename; hand-built tools get the same walk ``validate()`` performs."""
+    schemas: dict[str, Optional[list]] = {}
+    for p in plan.pipelines:
+        schemas[p.name] = _pipeline_schema(p, schemas)
+    return schemas
+
+
 def _check_partitioning(pipe: "Pipeline", by_name: dict) -> list[str]:
     """Structural checks for a declared (relied-on) input partitioning:
     the property must be exactly what the upstream shuffle established —

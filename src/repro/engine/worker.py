@@ -191,6 +191,26 @@ def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
     return _resolve_broadcasts(store, ops, metrics)
 
 
+def partition_class_bitmap(batch: ColumnBatch, key: str, fanout: int) -> int:
+    """Bitmap of the ``key % fanout`` classes present in a batch, under
+    the exact assignment rule ``operators.radix_partition`` uses (int64
+    truncation then modulo).
+
+    This is the summarized form of the runtime co-partition check: a
+    stored partition slice i of a declared-partitioned table must have
+    bitmap ``1 << i`` (or 0 when empty). The adaptive executor probes it
+    at a stage boundary to demote a skew-violating elided join *before*
+    the worker's fail-loud validation would abort the stage."""
+    if batch.num_rows == 0:
+        return 0
+    classes = np.unique(np.asarray(batch[key]).astype(np.int64)
+                        % int(fanout))
+    bitmap = 0
+    for c in classes:
+        bitmap |= 1 << int(c)
+    return bitmap
+
+
 def _validate_partitioning(batch: ColumnBatch, part: Optional[dict],
                            spec: FragmentSpec, side: str = "input") -> None:
     """Verify a relied-on partitioning property against the actual data:

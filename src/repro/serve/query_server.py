@@ -77,6 +77,12 @@ class ServeReport:
     plan_cache_misses: int
     result_cache_hits: int
     admission: dict[str, dict]          # tenant -> admitted/denied/queued_s
+    # Adaptive-execution totals summed over the served queries' results
+    # (engine.adaptive counters carried on QueryResult; zero when every
+    # query ran the static path).
+    replans: int = 0
+    speculative_launched: int = 0
+    speculative_won: int = 0
 
     @property
     def plan_cache_hit_rate(self) -> float:
@@ -361,6 +367,10 @@ class QueryServer:
             p99_latency_s=float(np.percentile(lat, 99)),
             plan_cache_hits=plan_hits, plan_cache_misses=plan_misses,
             result_cache_hits=result_hits,
+            replans=sum(s.result.replans for s in served),
+            speculative_launched=sum(
+                s.result.speculative_launched for s in served),
+            speculative_won=sum(s.result.speculative_won for s in served),
             admission={
                 tenant: {"admitted": b.admitted, "denied": b.denied}
                 for tenant, b in admitter.buckets.items()})

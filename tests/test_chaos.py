@@ -1,0 +1,107 @@
+"""Chaos-mode fault injection (core.chaos): deterministic per-(seed,
+identity) decisions, first-offer-only transient faults scoped to the
+shuffle namespace, store integration (dropped writes billed but absent,
+throttles raised and healed by the retrying reader), and the lognormal
+slowdown draws the scheduler consumes."""
+import math
+
+import pytest
+
+from repro.core.chaos import ChaosPolicy
+from repro.core.storage_service import ObjectStore, ThrottledError
+
+
+def test_decisions_are_pure_functions_of_seed_and_identity():
+    """Fault decisions must not depend on call ORDER or on a shared RNG
+    stream: two policies with the same seed agree key-by-key even when
+    interrogated in different orders."""
+    keys = [f"shuffle/q/p/w{w:04d}/r{r:04d}"
+            for w in range(8) for r in range(4)]
+    a = ChaosPolicy(seed=7, drop_prob=0.3, throttle_prob=0.3)
+    b = ChaosPolicy(seed=7, drop_prob=0.3, throttle_prob=0.3)
+    drops_a = [a.drop_write(k) for k in keys]
+    drops_b = [b.drop_write(k) for k in reversed(keys)]
+    assert drops_a == list(reversed(drops_b))
+    assert any(drops_a) and not all(drops_a)
+
+    s1 = ChaosPolicy(seed=7, slow_prob=0.5)
+    s2 = ChaosPolicy(seed=7, slow_prob=0.5)
+    m1 = [s1.slow_multiplier("stage", i) for i in range(32)]
+    m2 = [s2.slow_multiplier("stage", i) for i in reversed(range(32))]
+    assert m1 == list(reversed(m2))
+    # A different seed produces a different fault schedule.
+    s3 = ChaosPolicy(seed=8, slow_prob=0.5)
+    assert [s3.slow_multiplier("stage", i) for i in range(32)] != m1
+
+
+def test_slow_multiplier_bounds_and_attempt_independence():
+    ch = ChaosPolicy(seed=1, slow_prob=1.0, slow_mu=1.2, slow_sigma=0.4)
+    mults = [ch.slow_multiplier("s", i) for i in range(64)]
+    assert all(m >= 1.0 for m in mults)
+    # slow_prob=1 with mu=1.2: the typical draw is ~e^1.2, far above 1.
+    assert sum(mults) / len(mults) > 2.0
+    # The duplicate (attempt=1) draws independently of the original.
+    assert ch.slow_multiplier("s", 0, attempt=1) != \
+        ch.slow_multiplier("s", 0, attempt=0)
+    # slow_prob=0 never slows.
+    calm = ChaosPolicy(seed=1, slow_prob=0.0)
+    assert all(calm.slow_multiplier("s", i) == 1.0 for i in range(16))
+
+
+def test_drop_is_first_offer_only_and_scoped():
+    ch = ChaosPolicy(seed=0, drop_prob=1.0)
+    key = "shuffle/q/p/w0000/r0000"
+    assert ch.drop_write(key)            # first offer: dropped
+    assert not ch.drop_write(key)        # retry/duplicate heals
+    # Keys outside the scope prefix (base tables, collect results) are
+    # never faulted: only re-executable intermediates may be lost.
+    assert not ch.drop_write("tables/lineitem/part-00000")
+    assert not ch.drop_write("result/q/p/frag-0000")
+    assert ch.stats()["drops"] == 1
+
+
+def test_dropped_write_billed_but_absent_then_healed():
+    """Store integration: a chaos-dropped put bills the write like the
+    real request that failed server-side, but the object never lands;
+    the idempotent re-put (duplicate execution) lands."""
+    store = ObjectStore()
+    store.chaos = ChaosPolicy(seed=0, drop_prob=1.0)
+    key = "shuffle/q/p/w0000/r0000"
+    store.put(key, b"payload")
+    assert store.stats.writes == 1
+    with pytest.raises(KeyError):
+        store.get(key)
+    store.put(key, b"payload")           # first writer wins semantics:
+    assert store.get(key) == b"payload"  # the re-put is byte-identical
+    # Unscoped keys pass through untouched even at drop_prob=1.
+    store.put("tables/t/part-0", b"base")
+    assert store.get("tables/t/part-0") == b"base"
+
+
+def test_throttle_first_offer_and_retrying_get_heals():
+    store = ObjectStore()
+    store.put("shuffle/q/p/w0000/r0000", b"x")
+    store.chaos = ChaosPolicy(seed=0, throttle_prob=1.0)
+    with pytest.raises(ThrottledError):
+        store.get("shuffle/q/p/w0000/r0000")
+    # Second offer goes through, so the standard retrying reader heals
+    # the fault transparently.
+    store.chaos = ChaosPolicy(seed=0, throttle_prob=1.0)
+    assert store.retrying_get("shuffle/q/p/w0000/r0000") == b"x"
+    assert store.stats.throttled >= 1
+
+
+def test_probabilities_roughly_respected():
+    ch = ChaosPolicy(seed=11, drop_prob=0.25)
+    n = 400
+    drops = sum(ch.drop_write(f"shuffle/q/p/w{i:04d}/r0000")
+                for i in range(n))
+    assert 0.15 * n < drops < 0.35 * n
+
+
+def test_slow_magnitude_is_lognormal_shaped():
+    ch = ChaosPolicy(seed=5, slow_prob=1.0, slow_mu=1.2, slow_sigma=0.4)
+    mults = [ch.slow_multiplier("s", i) for i in range(512)]
+    logs = [math.log(m) for m in mults]
+    mean = sum(logs) / len(logs)
+    assert 1.0 < mean < 1.5              # centred near slow_mu
