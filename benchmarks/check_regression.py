@@ -37,6 +37,11 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_BENCH = REPO_ROOT / "BENCH_engine.json"
 PLANNING_OVERHEAD_MAX = 0.01        # lowering < 1% of Q12 runtime
 ADAPTIVE_P99_MIN = 1.3              # adaptive vs static under chaos, p99
+# Out-of-core: a spilling run (fixed per-worker cap, multiple spill
+# rounds, spilled join build) must stay within this slowdown of the
+# unbudgeted in-memory run at EQUAL row counts — spill trades bounded
+# memory for bandwidth, not for an order of magnitude of runtime.
+SPILL_OVERHEAD_MAX = 4.0
 
 
 def collect_speedups(obj, prefix="") -> dict[str, float]:
@@ -116,6 +121,15 @@ def check(current: dict, baseline: dict | None, tolerance: float,
                 f"concurrent_serving.plan_cache_hit_rate: {rate:.3f} < "
                 f"{floor:.3f} — same-shape queries are missing the "
                 "compiled-plan cache")
+    ooc = current.get("out_of_core", {})
+    for key, slow in sorted(ooc.items()):
+        if not key.endswith("spill_slowdown"):
+            continue
+        if slow > SPILL_OVERHEAD_MAX:
+            failures.append(
+                f"out_of_core.{key}: {slow:.3f}x > {SPILL_OVERHEAD_MAX}x "
+                "— spilling under the fixed per-worker cap costs more "
+                "than the bounded overhead budget vs the in-memory run")
     chaos = current.get("adaptive_chaos", {})
     p99 = chaos.get("p99_speedup")
     if p99 is not None and p99 < ADAPTIVE_P99_MIN:
@@ -176,6 +190,10 @@ def main(argv=None) -> int:
     if p99 is not None:
         print(f"  adaptive_chaos.p99_speedup: {p99:.3f}x "
               f"(min {ADAPTIVE_P99_MIN}x)")
+    for key, slow in sorted(current.get("out_of_core", {}).items()):
+        if key.endswith("spill_slowdown"):
+            print(f"  out_of_core.{key}: {slow:.3f}x "
+                  f"(max {SPILL_OVERHEAD_MAX}x)")
     if failures:
         print("\nREGRESSIONS:")
         for f in failures:

@@ -19,7 +19,11 @@ python -m pytest -x -q
 # injected faults (speculation idempotency, targeted repair, demotion).
 python -m pytest -q tests/test_chaos.py tests/test_adaptive.py
 
-REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange,adaptive_chaos"
+# Spill-parity suite: every parity query re-run under a budget that
+# forces >= 2 spill rounds must collect bit-identical results.
+python -m pytest -q tests/test_out_of_core.py
+
+REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange,adaptive_chaos,out_of_core"
 python -m benchmarks.check_regression \
     --require-section "$REQUIRED_SECTIONS" "$@"
 

@@ -445,7 +445,8 @@ class AdaptiveCoordinator(Coordinator):
         global_agg = any(op.get("op") == "hash_agg" and not op.get("keys")
                          for op in pipe.ops)
         if self.policy.replan_fanout and not global_agg:
-            new = optimizer.derive_fanout(est_out, self.backend)
+            new = optimizer.derive_fanout(
+                est_out, self.backend, memory_budget=self.memory_budget)
             if new != out.partitions \
                     and self._refanout_feasible(plan, pipe, frag_counts):
                 old = out.partitions

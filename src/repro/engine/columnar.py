@@ -128,12 +128,16 @@ def serialize_frame(batch: ColumnBatch,
 def deserialize_frame(data: bytes,
                       columns: Optional[Iterable[str]] = None) -> ColumnBatch:
     """Decode a frame; unrequested column buffers are never touched. Without
-    compression each column is a zero-copy ``np.frombuffer`` view."""
-    if data[:4] != FRAME_MAGIC:
+    compression each column is a zero-copy ``np.frombuffer`` view.
+
+    ``data`` may be any buffer-protocol object — in particular a
+    ``memoryview`` over an mmap'd spill file (``engine.spill``), in which
+    case the views are file-backed and page in on first access."""
+    if bytes(data[:4]) != FRAME_MAGIC:
         raise ValueError("not a columnar frame")
     flags, header_len = struct.unpack_from("<BI", data, 4)
     header_end = 4 + 5 + header_len
-    header = json.loads(data[9:header_end])
+    header = json.loads(bytes(data[9:header_end]))
     base = _align(header_end)
     compressed = flags & FLAG_COMPRESSED
     columns = None if columns is None else list(columns)

@@ -503,6 +503,12 @@ class _FusedTail:
         self._seen_build: set = set()
         self._seen_out: set = set()      # expanded-row counts (dup joins)
         self._fns: dict = {}
+        # Last build-side prep (argsort, bucket index, payload gathers),
+        # keyed by the identity of the build's key array. Morsel-wise
+        # probing runs the same tail many times against one build; the
+        # held reference keeps the key array alive so an `is` check can
+        # never false-positive on a recycled id.
+        self._build_prep: Optional[tuple] = None
 
     # -- plan analysis (per input schema) ----------------------------------
     def _resolve_needed(self, left_names, right_names):
@@ -817,6 +823,9 @@ class _FusedTail:
         needs_pos = any(s[0] == "right" for s in final_sources.values())
 
         # Host-side build prep: argsort + bucket index for the probe.
+        # Memoized on the build key array's identity: out-of-core morsel
+        # streaming probes one build with many small batches, and the
+        # O(build) argsort + payload gathers must not be paid per morsel.
         bkeys_pad = scalars = starts = None
         bpay_sorted: dict = {}
         bpay_out: dict = {}
@@ -824,32 +833,44 @@ class _FusedTail:
         has_dups = False
         if self.join is not None:
             rkeys = np.asarray(build[self.join["right_key"]])
-            border = np.argsort(rkeys, kind="stable")
-            bs = rkeys[border].astype(np.int32)
-            has_dups = bool(bs[1:].size and np.any(bs[1:] == bs[:-1]))
-            scalars, starts, iters = hj_kernel.prepare_buckets(bs)
-            s = len(bs)
-            s_pad = s if s in self._seen_build or \
-                len(self._seen_build) < _MAX_RAW_SHAPES else _pow2(s)
-            self._seen_build.add(s)
-            if s_pad > s:
-                bs = np.concatenate(
-                    [bs, np.full(s_pad - s, hj_kernel._INT32_MAX,
-                                 np.int32)])
-            bkeys_pad = bs
-            # One gather per needed payload column: the unpadded sorted
-            # copy serves the host-side pass-through outputs (original
-            # dtype preserved), a padded view of the same array feeds the
-            # trace.
             out_cols = {src[1] for src in final_sources.values()
                         if src[0] == "right"}
-            for c in sorted(set(right_in) | out_cols):
-                v = np.asarray(build[c])[border]
-                if c in out_cols:
-                    bpay_out[c] = v
-                if c in right_in:
-                    bpay_sorted[c] = v if s_pad == s else np.concatenate(
-                        [v, np.zeros(s_pad - s, v.dtype)])
+            prep_key = (tuple(right_in), tuple(sorted(out_cols)))
+            if self._build_prep is not None \
+                    and self._build_prep[0] is rkeys \
+                    and self._build_prep[1] == prep_key:
+                (bkeys_pad, has_dups, scalars, starts, iters,
+                 bpay_sorted, bpay_out) = self._build_prep[2]
+            else:
+                border = np.argsort(rkeys, kind="stable")
+                bs = rkeys[border].astype(np.int32)
+                has_dups = bool(bs[1:].size
+                                and np.any(bs[1:] == bs[:-1]))
+                scalars, starts, iters = hj_kernel.prepare_buckets(bs)
+                s = len(bs)
+                s_pad = s if s in self._seen_build or \
+                    len(self._seen_build) < _MAX_RAW_SHAPES else _pow2(s)
+                self._seen_build.add(s)
+                if s_pad > s:
+                    bs = np.concatenate(
+                        [bs, np.full(s_pad - s, hj_kernel._INT32_MAX,
+                                     np.int32)])
+                bkeys_pad = bs
+                # One gather per needed payload column: the unpadded
+                # sorted copy serves the host-side pass-through outputs
+                # (original dtype preserved), a padded view of the same
+                # array feeds the trace.
+                for c in sorted(set(right_in) | out_cols):
+                    v = np.asarray(build[c])[border]
+                    if c in out_cols:
+                        bpay_out[c] = v
+                    if c in right_in:
+                        bpay_sorted[c] = v if s_pad == s \
+                            else np.concatenate(
+                                [v, np.zeros(s_pad - s, v.dtype)])
+                self._build_prep = (rkeys, prep_key,
+                                    (bkeys_pad, has_dups, scalars, starts,
+                                     iters, bpay_sorted, bpay_out))
 
         left_cols, _ = _bounded_shape(
             {c: np.asarray(batch[c]) for c in left_in}, n, self._seen_probe)
@@ -1049,6 +1070,25 @@ def run_pipeline_jit(batch: ColumnBatch, ops: list[dict]) -> ColumnBatch:
         else:
             raise ValueError(f"unknown operator {kind!r}")
     return batch
+
+
+# Ops whose output over a concatenation of morsels equals the
+# concatenation of their per-morsel outputs, bit for bit: filters and
+# projections are row-local, and a hash-join probe depends only on the
+# (whole) build side, emitting matches in probe order. Aggregates and
+# UDFs are barriers — they need the full fragment.
+STREAMABLE_OPS = ("filter", "project", "hash_join")
+
+
+def streamable_prefix(ops: list[dict]) -> int:
+    """Number of leading ops safe to evaluate morsel-at-a-time with
+    bit-identical concatenated output (see ``STREAMABLE_OPS``). The
+    out-of-core worker streams this prefix and accumulates (spilling
+    under memory pressure) before the first barrier op."""
+    for i, op in enumerate(ops):
+        if op["op"] not in STREAMABLE_OPS:
+            return i
+    return len(ops)
 
 
 def _fusable_tail_start(ops: list[dict]) -> int:

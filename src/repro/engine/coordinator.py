@@ -116,6 +116,11 @@ class QueryResult:
     speculative_launched: int = 0
     speculative_won: int = 0
     adaptive_trace: list = dataclasses.field(default_factory=list)
+    # Out-of-core observability (zero without a per-worker memory
+    # budget): frame bytes spilled to worker-local disk across all
+    # fragments, and the largest per-fragment accounted memory peak.
+    spill_bytes: int = 0
+    mem_peak_bytes: int = 0
 
 
 class Coordinator:
@@ -127,7 +132,9 @@ class Coordinator:
                  rng_seed: int = 0,
                  backend: str = "jit",
                  kv_store: Optional[ObjectStore] = None,
-                 chaos=None):
+                 chaos=None,
+                 memory_budget: Optional[float] = None,
+                 morsel_rows: Optional[int] = None):
         if mode not in ("elastic", "provisioned"):
             raise ValueError(mode)
         if backend not in CPU_BYTES_PER_S_BY_BACKEND:
@@ -153,6 +160,13 @@ class Coordinator:
         # draws per-fragment slowdowns from it; callers attach the same
         # policy to the stores for drops/throttles.
         self.chaos = chaos
+        # Per-worker memory cap in bytes (ROADMAP item 4). None keeps
+        # the legacy whole-fragment workers; a cap makes every fragment
+        # stream bounded morsels and spill past its grant, and feeds the
+        # planner's memory-pressure fan-out term. ``morsel_rows``
+        # overrides the budget-derived morsel bound (tests/bench).
+        self.memory_budget = memory_budget
+        self.morsel_rows = morsel_rows
         self.scheduler = StageScheduler(self.pool, StragglerPolicy(),
                                         rng_seed=rng_seed, chaos=chaos)
         self.table_keys: dict[str, list[str]] = {}
@@ -169,8 +183,9 @@ class Coordinator:
         and this coordinator's backend throughput."""
         if isinstance(plan, LogicalQuery):
             stats = optimizer.Stats.from_store(self.store, self.table_keys)
-            plan, _report = optimizer.lower(plan, stats=stats,
-                                            backend=self.backend)
+            plan, _report = optimizer.lower(
+                plan, stats=stats, backend=self.backend,
+                memory_budget=self.memory_budget)
         return self.execute(plan, query_id)
 
     def execute(self, plan: QueryPlan, query_id: Optional[str] = None
@@ -243,6 +258,12 @@ class Coordinator:
                             for r in results.values())
         spec_won = sum(getattr(r, "speculative_won", 0)
                        for r in results.values())
+        frag_metrics = [m for r in results.values() for m in r.results
+                        if m is not None]
+        spill_bytes = sum(getattr(m, "spill_bytes", 0)
+                          for m in frag_metrics)
+        mem_peak = max((getattr(m, "mem_peak_bytes", 0)
+                        for m in frag_metrics), default=0)
         return QueryResult(
             name=plan.name, result=merged, runtime_s=runtime,
             cumulated_worker_s=node_seconds, faas_cost_usd=faas_cost,
@@ -260,7 +281,8 @@ class Coordinator:
             exchange_cost_usd={"object": object_usd, "kv": kv_usd},
             replans=replans, speculative_launched=spec_launched,
             speculative_won=spec_won,
-            adaptive_trace=list(adaptive_trace or []))
+            adaptive_trace=list(adaptive_trace or []),
+            spill_bytes=spill_bytes, mem_peak_bytes=mem_peak)
 
     # ------------------------------------------------------------------
     def compile_stages(self, plan: QueryPlan, query_id: str,
@@ -422,7 +444,9 @@ class Coordinator:
             partitioning=pipe.partitioning,
             partitioning2=pipe.partitioning2, columns2=columns2,
             missing_ok2=missing_ok2,
-            read_tier=read_tier, read_tier2=read_tier2)
+            read_tier=read_tier, read_tier2=read_tier2,
+            memory_budget=self.memory_budget,
+            morsel_rows=self.morsel_rows)
 
     def _tier_store(self, tier: str) -> ObjectStore:
         return self.kv_store if tier == "kv" else self.store

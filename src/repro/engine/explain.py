@@ -95,11 +95,13 @@ def format_adaptive(result) -> str:
 
 
 def explain(query: LogicalQuery, stats: Optional[optimizer.Stats] = None,
-            backend: str = "jit", result=None) -> str:
+            backend: str = "jit", result=None,
+            memory_budget: Optional[float] = None) -> str:
     from repro.engine import compile as engine_compile
     from repro.engine import plans as plans_mod
 
-    plan, report = optimizer.lower(query, stats=stats, backend=backend)
+    plan, report = optimizer.lower(query, stats=stats, backend=backend,
+                                   memory_budget=memory_budget)
     shape_hash = plans_mod.plan_shape_hash(plan)
     cache_state = "hit" if engine_compile.PLAN_CACHE.contains(shape_hash) \
         else "miss"
@@ -139,6 +141,16 @@ def main(argv=None) -> int:
                     help="backend whose measured throughput drives "
                          "fan-out choices (jit is the engine default; "
                          "numpy is the interpreted reference)")
+    ap.add_argument("--memory-budget", type=float, default=None,
+                    metavar="MIB",
+                    help="per-worker memory cap in MiB; adds the memory "
+                         "pressure term to shuffle fan-out derivation "
+                         "and traces it under 'applied rules'")
+    ap.add_argument("--table-mib", action="append", default=[],
+                    metavar="TABLE=MIB",
+                    help="planner statistic: table size in MiB "
+                         "(repeatable); without stats fan-out falls back "
+                         "to the default and the memory term is moot")
     ap.add_argument("--list", action="store_true",
                     help="list available queries")
     args = ap.parse_args(argv)
@@ -152,7 +164,17 @@ def main(argv=None) -> int:
         print(f"unknown query {args.query!r}; available: "
               f"{sorted(queries.LOGICAL_BUILDERS)}", file=sys.stderr)
         return 2
-    print(explain(builder(), backend=args.backend))
+    budget = None if args.memory_budget is None \
+        else args.memory_budget * 1024 * 1024
+    stats = None
+    if args.table_mib:
+        table_bytes = {}
+        for spec in args.table_mib:
+            table, _, mib = spec.partition("=")
+            table_bytes[table] = float(mib) * 1024 * 1024
+        stats = optimizer.Stats(table_bytes)
+    print(explain(builder(), stats=stats, backend=args.backend,
+                  memory_budget=budget))
     return 0
 
 

@@ -219,23 +219,36 @@ def op_hash_join(left: ColumnBatch, right: ColumnBatch, left_key: str,
     return ColumnBatch(cols)
 
 
-def radix_partition(batch: ColumnBatch, key_col: str, partitions: int
-                    ) -> list[ColumnBatch]:
-    """Single-pass shuffle partitioner. Returns ``partitions`` batches,
-    the i-th holding the rows with ``key % partitions == i`` (empty batches
-    share the reordered arrays via zero-length views)."""
+def radix_partition_iter(batch: ColumnBatch, key_col: str, partitions: int):
+    """Single-pass shuffle partitioner, chunked per-partition emission.
+
+    Yields ``(p, batch_p)`` in partition order, gathering one partition's
+    rows at a time: peak memory is the input + ONE partition's copy (plus
+    the int64 order array), not input + a full reordered copy — the
+    out-of-core shuffle writer serializes and drops each partition before
+    the next is gathered. Row order within a partition is the stable
+    input order, identical to materializing all partitions at once."""
     if batch.num_rows == 0:
-        return [batch] * partitions
+        for p in range(partitions):
+            yield p, batch
+        return
     assign = np.asarray(batch[key_col]).astype(np.int64) % partitions
     order = np.argsort(assign, kind="stable")
     counts = np.bincount(assign, minlength=partitions)
     bounds = np.concatenate(([0], np.cumsum(counts)))
-    reordered = {k: np.asarray(v)[order] for k, v in batch.items()}
-    out = []
+    cols = {k: np.asarray(v) for k, v in batch.items()}
     for p in range(partitions):
-        lo, hi = int(bounds[p]), int(bounds[p + 1])
-        out.append(ColumnBatch({k: v[lo:hi] for k, v in reordered.items()}))
-    return out
+        sel = order[int(bounds[p]):int(bounds[p + 1])]
+        yield p, ColumnBatch({k: v[sel] for k, v in cols.items()})
+
+
+def radix_partition(batch: ColumnBatch, key_col: str, partitions: int
+                    ) -> list[ColumnBatch]:
+    """Single-pass shuffle partitioner. Returns ``partitions`` batches,
+    the i-th holding the rows with ``key % partitions == i``. Callers
+    that consume partitions one at a time should prefer
+    ``radix_partition_iter``, which holds only one partition's copy."""
+    return [b for _, b in radix_partition_iter(batch, key_col, partitions)]
 
 
 # UDF registry (TPCx-BB Q3 style map-side session analysis).

@@ -143,22 +143,46 @@ class Stats:
 DEFAULT_COLUMN_WIDTH = 8
 
 
+# Fraction of a worker's memory cap one fragment's input may target:
+# the rest is headroom for the partition buffers / join build / output
+# the fragment materializes on top of its input. Fan-out derived from
+# memory pressure keeps fragments inside this window when it can; past
+# MAX_SHUFFLE_PARTITIONS the worker's morsel streaming + spill absorb
+# the remainder.
+MEMORY_TARGET_FRACTION = 0.5
+
+
+def memory_fanout(est_bytes: Optional[float],
+                  memory_budget: Optional[float]) -> int:
+    """Minimum fan-out for one fragment's input slice to fit inside
+    ``MEMORY_TARGET_FRACTION`` of the per-worker memory cap."""
+    if est_bytes is None or not memory_budget:
+        return 1
+    return max(1, math.ceil(est_bytes /
+                            (memory_budget * MEMORY_TARGET_FRACTION)))
+
+
 def derive_fanout(est_bytes: Optional[float], backend: str,
-                  bench_path: Optional[str] = None) -> int:
+                  bench_path: Optional[str] = None,
+                  memory_budget: Optional[float] = None) -> int:
     """Size-based shuffle fan-out: one partition is about
     ``TARGET_PARTITION_SECONDS`` of work at the measured backend
-    throughput, clamped to [1, MAX_SHUFFLE_PARTITIONS].
+    throughput — AND, under a per-worker ``memory_budget`` (bytes), small
+    enough that a fragment's input slice fits its memory window
+    (``memory_fanout``) — clamped to [1, MAX_SHUFFLE_PARTITIONS].
 
     Module-level because two layers make the same decision: lowering
     (``_Lowering._fanout``, from estimates) and the adaptive executor
-    (``engine.adaptive``, from bytes observed at a stage boundary).
+    (``engine.adaptive``, from bytes observed at a stage boundary, which
+    re-derives with the same memory term).
     """
     if est_bytes is None:
         return DEFAULT_SHUFFLE_PARTITIONS
     bw = bench_profile.cpu_bytes_per_s(
         backend, FALLBACK_CPU_BYTES_PER_S[backend], path=bench_path)
-    return max(1, min(MAX_SHUFFLE_PARTITIONS,
-                      math.ceil(est_bytes / (bw * TARGET_PARTITION_SECONDS))))
+    n = max(math.ceil(est_bytes / (bw * TARGET_PARTITION_SECONDS)),
+            memory_fanout(est_bytes, memory_budget))
+    return max(1, min(MAX_SHUFFLE_PARTITIONS, n))
 
 
 @dataclasses.dataclass
@@ -365,7 +389,8 @@ class _Lowering:
     def __init__(self, query: LogicalQuery, stats: Optional[Stats],
                  backend: str, bench_path: Optional[str],
                  trace: list[str], elide: bool = True,
-                 exchange_tiers: str = "auto"):
+                 exchange_tiers: str = "auto",
+                 memory_budget: Optional[float] = None):
         self.query = query
         self.stats = stats or Stats()
         self.backend = backend
@@ -373,6 +398,7 @@ class _Lowering:
         self.trace = trace
         self.elide = elide
         self.exchange_tiers = exchange_tiers
+        self.memory_budget = memory_budget
         self.pipelines: list[Pipeline] = []
         self._names: dict[str, int] = {}
 
@@ -423,12 +449,23 @@ class _Lowering:
                               f"(no stats; default)")
             return n
         n = derive_fanout(est_bytes, self.backend,
-                          bench_path=self.bench_path)
+                          bench_path=self.bench_path,
+                          memory_budget=self.memory_budget)
+        n_mem = memory_fanout(est_bytes, self.memory_budget)
+        n_tput = derive_fanout(est_bytes, self.backend,
+                               bench_path=self.bench_path)
         self.trace.append(
             f"shuffle_fanout: {what} -> {n} partitions "
             f"(~{est_bytes / MIB:.1f} MiB at "
             f"{self._cpu_bw() / MIB:.0f} MiB/s per {TARGET_PARTITION_SECONDS}s "
             f"partition)")
+        if self.memory_budget and n_mem > n_tput:
+            self.trace.append(
+                f"shuffle_fanout: {what} memory pressure -> >= {n_mem} "
+                f"partitions (~{est_bytes / MIB:.1f} MiB vs "
+                f"{self.memory_budget * MEMORY_TARGET_FRACTION / MIB:.0f} MiB "
+                f"per-fragment window of {self.memory_budget / MIB:.0f} MiB "
+                f"cap)")
         return n
 
     def _shuffle_out(self, key: str, partitions: int,
@@ -910,7 +947,9 @@ def _fmt_part(part: Optional[tuple[str, int]]) -> str:
 def lower(query: LogicalQuery, stats: Optional[Stats] = None,
           backend: str = "numpy", bench_path: Optional[str] = None,
           shuffle_elision: bool = True,
-          exchange_tiers: str = "auto") -> tuple[QueryPlan, PlanReport]:
+          exchange_tiers: str = "auto",
+          memory_budget: Optional[float] = None
+          ) -> tuple[QueryPlan, PlanReport]:
     """Optimize and lower a logical query. Returns the physical plan plus
     the report of applied rules (see ``engine.explain``).
     ``shuffle_elision=False`` disables the partitioning-property elision
@@ -919,7 +958,9 @@ def lower(query: LogicalQuery, stats: Optional[Stats] = None,
     ``"auto"`` (default) picks per shuffle by break-even analysis,
     ``"object"``/``"kv"`` force every shuffle onto one tier (the
     ``tiered_exchange`` benchmark lowers all three variants from one
-    logical query)."""
+    logical query). ``memory_budget`` (bytes per worker) adds a memory
+    term to shuffle fan-out derivation: a fragment's input slice should
+    fit ``MEMORY_TARGET_FRACTION`` of the cap (see ``derive_fanout``)."""
     if exchange_tiers not in ("auto", "object", "kv"):
         raise ValueError(f"exchange_tiers must be 'auto', 'object' or "
                          f"'kv', got {exchange_tiers!r}")
@@ -927,7 +968,8 @@ def lower(query: LogicalQuery, stats: Optional[Stats] = None,
     root = _pushdown(query.root, [], trace)
     root = _prune(root, None, trace)
     low = _Lowering(query, stats, backend, bench_path, trace,
-                    elide=shuffle_elision, exchange_tiers=exchange_tiers)
+                    elide=shuffle_elision, exchange_tiers=exchange_tiers,
+                    memory_budget=memory_budget)
     pipe = low.build(root)
     low._close(pipe, CollectOutput())
     plan = QueryPlan(query.name, low.pipelines)
@@ -938,10 +980,12 @@ def lower(query: LogicalQuery, stats: Optional[Stats] = None,
 def plan(query: LogicalQuery, stats: Optional[Stats] = None,
          backend: str = "numpy", bench_path: Optional[str] = None,
          shuffle_elision: bool = True,
-         exchange_tiers: str = "auto") -> QueryPlan:
+         exchange_tiers: str = "auto",
+         memory_budget: Optional[float] = None) -> QueryPlan:
     """``lower`` without the report — the one-call path for query
     builders."""
     return lower(query, stats=stats, backend=backend,
                  bench_path=bench_path,
                  shuffle_elision=shuffle_elision,
-                 exchange_tiers=exchange_tiers)[0]
+                 exchange_tiers=exchange_tiers,
+                 memory_budget=memory_budget)[0]

@@ -35,13 +35,23 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import memory as core_memory
 from repro.core.storage_service import ObjectStore
-from repro.engine import columnar, compile as engine_compile, operators
+from repro.engine import columnar, compile as engine_compile, operators, \
+    spill
 from repro.engine.columnar import ColumnBatch
 
 # Re-exported: the single-pass radix partitioner lives in ``operators`` so
 # both execution backends share it without circular imports.
 radix_partition = operators.radix_partition
+radix_partition_iter = operators.radix_partition_iter
+
+# Out-of-core tuning: a streamed morsel targets this fraction of the
+# worker's memory cap (so a handful of morsels plus one partition's
+# output fit comfortably), floored so pathological caps cannot degrade
+# into row-at-a-time execution.
+MORSEL_BUDGET_FRACTION = 1.0 / 16.0
+MIN_MORSEL_ROWS = 1024
 
 
 @dataclasses.dataclass
@@ -75,6 +85,15 @@ class FragmentSpec:
     # its own "tier". Table scans and collect results are always object-tier.
     read_tier: str = "object"
     read_tier2: str = "object"
+    # Out-of-core execution (ROADMAP item 4): per-worker memory cap in
+    # bytes. None keeps the legacy whole-fragment materialization; a cap
+    # streams scans/join probes in bounded morsels, accounts every
+    # materialization against a ``core.memory.MemoryBudget``, and spills
+    # partition buffers / join builds to frame files when a grant
+    # refuses. ``morsel_rows`` bounds a streamed morsel explicitly
+    # (None derives it from the cap and the observed row width).
+    memory_budget: float | None = None
+    morsel_rows: int | None = None
 
 
 @dataclasses.dataclass
@@ -86,6 +105,14 @@ class FragmentMetrics:
     rows_in: int = 0
     rows_out: int = 0
     partitions_written: int = 0         # bitmap over shuffle partition ids
+    # Out-of-core accounting (zero under the legacy unbudgeted path):
+    # frame bytes spilled to local disk, accumulator flush rounds, and
+    # the budget's peak/overcommit watermarks (``core.memory``).
+    spill_bytes: int = 0
+    spill_rounds: int = 0
+    mem_peak_bytes: int = 0
+    mem_overcommit_bytes: int = 0
+    mem_cap_bytes: int = 0
 
 
 class ShuffleRegistry:
@@ -164,12 +191,20 @@ def _read_side(store: ObjectStore, keys: list[str], columns,
 def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
                    metrics: FragmentMetrics,
                    registry: Optional[ShuffleRegistry],
-                   build_store: Optional[ObjectStore] = None) -> list[dict]:
+                   build_store: Optional[ObjectStore] = None,
+                   budget: Optional[core_memory.MemoryBudget] = None
+                   ) -> list[dict]:
     """Resolve the op chain to executable form: legacy ``spec.join``
     becomes a leading ``hash_join`` op, build-side reads resolve into the
     join op specs, broadcast side-inputs load into UDF kwargs.
     ``build_store`` is the exchange tier the build-side shuffle rode
-    (defaults to ``store``; broadcasts always load from ``store``)."""
+    (defaults to ``store``; broadcasts always load from ``store``).
+
+    Under a memory ``budget`` the resolved build side is charged to a
+    ``join_build`` grant; when the grant refuses, the build is demoted to
+    a spilled frame file (``spill.spill_build``) whose columns read back
+    as zero-copy views over file-backed pages — same values, same probe
+    semantics, but reclaimable memory instead of anonymous heap."""
     ops = list(spec.ops)
     if spec.join is not None:
         ops.insert(0, {"op": "hash_join", **spec.join})
@@ -182,6 +217,10 @@ def _normalize_ops(store: ObjectStore, spec: FragmentSpec,
                            missing_ok=spec.missing_ok2, registry=registry)
         _validate_partitioning(build, spec.partitioning2, spec,
                                side="build")
+        if budget is not None and build.num_rows:
+            grant = budget.grant("join_build")
+            if not grant.try_reserve(build.nbytes()):
+                build = spill.spill_build(build)
         resolved = []
         for op in ops:
             if op.get("op") == "hash_join" and "build" not in op:
@@ -250,11 +289,26 @@ def execute_fragment(store: ObjectStore, spec: FragmentSpec,
     memory-grade exchange tier for shuffle sides/outputs whose spec says
     ``"kv"``. Without a ``kv_store`` every tier falls back to ``store``
     (standalone fragments and legacy callers), keeping writes and reads
-    consistently routed."""
+    consistently routed.
+
+    With ``spec.memory_budget`` set the fragment runs out-of-core (see
+    ``_execute_out_of_core``): same bytes written, same bits, bounded
+    memory."""
     def tier_store(tier: str) -> ObjectStore:
         return kv_store if tier == "kv" and kv_store is not None else store
 
     metrics = FragmentMetrics()
+    if spec.memory_budget is not None:
+        return _execute_out_of_core(store, spec, metrics, registry,
+                                    tier_store)
+    return _execute_in_memory(store, spec, metrics, registry, tier_store)
+
+
+def _execute_in_memory(store: ObjectStore, spec: FragmentSpec,
+                       metrics: FragmentMetrics,
+                       registry: Optional[ShuffleRegistry],
+                       tier_store) -> FragmentMetrics:
+    """Legacy whole-fragment materialization (no memory budget)."""
     batch = _read_side(tier_store(spec.read_tier), spec.read_keys,
                        spec.columns, metrics,
                        missing_ok=spec.missing_ok, registry=registry)
@@ -267,34 +321,202 @@ def execute_fragment(store: ObjectStore, spec: FragmentSpec,
         parts = engine_compile.run_pipeline_partition(
             batch, ops, out["partition_by"], out["partitions"],
             backend=spec.backend)
-        wstore = tier_store(out.get("tier", "object"))
-        bitmap = 0
-        for part, sel in enumerate(parts):
-            metrics.rows_out += sel.num_rows
-            if sel.num_rows == 0:
-                continue   # readers tolerate the missing object
-            bitmap |= 1 << part
-            data = columnar.serialize_frame(sel)
-            wstore.put(shuffle_key(spec.query_id, spec.pipeline,
-                                   spec.fragment, part), data)
-            metrics.write_requests += 1
-            metrics.write_bytes += len(data)
-        metrics.partitions_written = bitmap
-        if registry is not None:
-            registry.record(spec.query_id, spec.pipeline, spec.fragment,
-                            bitmap)
+        _write_shuffle(enumerate(parts), spec, metrics,
+                       tier_store(out.get("tier", "object")), registry)
     else:
         # Collect fragments route through the collapsed-agg-aware driver:
         # an elided (fragment-local, full) trailing hash_agg fuses with
         # its preceding segment exactly like a shuffle fragment's would.
         batch = engine_compile.run_pipeline_collect(batch, ops,
                                                     backend=spec.backend)
-        metrics.rows_out = batch.num_rows
-        data = columnar.serialize_frame(batch)
-        store.put(result_key(spec.query_id, spec.pipeline, spec.fragment),
-                  data)
+        _write_collect(batch, spec, metrics, store)
+    return metrics
+
+
+def _write_shuffle(parts, spec: FragmentSpec, metrics: FragmentMetrics,
+                   wstore: ObjectStore,
+                   registry: Optional[ShuffleRegistry]) -> None:
+    """Write ``(partition, batch)`` pairs as shuffle objects, recording
+    the written-partition bitmap. Consumes lazily, so a chunked-emission
+    producer (``radix_partition_iter``, a spill accumulator) holds only
+    one partition's copy at a time."""
+    bitmap = 0
+    for part, sel in parts:
+        metrics.rows_out += sel.num_rows
+        if sel.num_rows == 0:
+            continue   # readers tolerate the missing object
+        bitmap |= 1 << part
+        data = columnar.serialize_frame(sel)
+        wstore.put(shuffle_key(spec.query_id, spec.pipeline,
+                               spec.fragment, part), data)
         metrics.write_requests += 1
         metrics.write_bytes += len(data)
+    metrics.partitions_written = bitmap
+    if registry is not None:
+        registry.record(spec.query_id, spec.pipeline, spec.fragment,
+                        bitmap)
+
+
+def _write_collect(batch: ColumnBatch, spec: FragmentSpec,
+                   metrics: FragmentMetrics, store: ObjectStore) -> None:
+    metrics.rows_out = batch.num_rows
+    data = columnar.serialize_frame(batch)
+    store.put(result_key(spec.query_id, spec.pipeline, spec.fragment),
+              data)
+    metrics.write_requests += 1
+    metrics.write_bytes += len(data)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core execution (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+def _morsel_rows_for(batch: ColumnBatch, spec: FragmentSpec,
+                     cap: Optional[int]) -> int:
+    if spec.morsel_rows:
+        return int(spec.morsel_rows)
+    if cap is None or not batch.num_rows:
+        return max(batch.num_rows, 1)
+    row_bytes = max(1, batch.nbytes() // batch.num_rows)
+    return max(MIN_MORSEL_ROWS,
+               int(cap * MORSEL_BUDGET_FRACTION) // row_bytes)
+
+
+def _iter_morsels(store: ObjectStore, spec: FragmentSpec,
+                  metrics: FragmentMetrics,
+                  registry: Optional[ShuffleRegistry],
+                  budget: core_memory.MemoryBudget):
+    """Stream the main input side object-by-object, slicing each object
+    into budget-bounded morsels (zero-copy row views). Mirrors
+    ``_read_side``'s missing-object handling and partitioning
+    validation, morsel by morsel."""
+    for key in spec.read_keys:
+        try:
+            data = store.retrying_get(key)
+        except KeyError:
+            if spec.missing_ok:
+                if registry is not None:
+                    registry.validate_missing(key)
+                metrics.read_requests += 1   # the 404 probe is a request
+                continue
+            raise
+        metrics.read_requests += 1
+        metrics.read_bytes += len(data)
+        batch = columnar.deserialize(data, spec.columns)
+        _validate_partitioning(batch, spec.partitioning, spec)
+        metrics.rows_in += batch.num_rows
+        step = _morsel_rows_for(batch, spec, budget.cap_bytes)
+        for lo in range(0, batch.num_rows, step):
+            yield ColumnBatch({k: v[lo:lo + step]
+                               for k, v in batch.items()})
+
+
+def _execute_out_of_core(store: ObjectStore, spec: FragmentSpec,
+                         metrics: FragmentMetrics,
+                         registry: Optional[ShuffleRegistry],
+                         tier_store) -> FragmentMetrics:
+    """Budgeted fragment execution: bounded morsels + spill, bit-identical
+    output bytes vs ``_execute_in_memory`` on the same backend.
+
+    Three shapes, chosen so every streamed decomposition matches what the
+    in-memory driver computes internally (same driver functions, same
+    traces — the differential spill-parity suite asserts the bits):
+
+    * **streamable shuffle** (``filter|project|hash_join`` only): each
+      morsel runs through ``run_pipeline_partition`` and its partition
+      slices accumulate per-partition (spilling whole buffer rounds when
+      the grant refuses); the stable radix partition makes
+      concat-of-morsel-partitions identical to partitioning the concat.
+    * **pre-agg shuffle** (streamable prefix + trailing ``hash_agg``
+      keyed by the partition column): morsels stream the pre-agg ops,
+      and the aggregate runs per partition at finalize — exactly the
+      decomposition the jit partition-fusion driver (and the numpy
+      stable lexsort/reduceat reference) already uses.
+    * **barrier** (mid-chain agg/UDF, and every collect fragment): the
+      numpy backend streams the row-local prefix; the jit backend
+      accumulates raw morsels (its collect driver owns the fusion split,
+      so re-splitting outside it could shift f32 association). Either
+      way the accumulated batch — spilled and re-read as needed — feeds
+      the unchanged in-memory driver, whose materialization is charged
+      as a forced (recorded-overcommit) reservation: a full aggregate's
+      working set is irreducible.
+    """
+    stats_before = dict(spill.SPILL_STATS)
+    budget = core_memory.MemoryBudget(spec.memory_budget)
+    ops = _normalize_ops(store, spec, metrics, registry,
+                         build_store=tier_store(spec.read_tier2),
+                         budget=budget)
+    out = spec.output
+    backend = spec.backend
+    acc_grant = budget.grant("accumulator")
+    morsels = _iter_morsels(tier_store(spec.read_tier), spec, metrics,
+                            registry, budget)
+
+    if out["type"] == "shuffle":
+        key_col, r = out["partition_by"], out["partitions"]
+        k = engine_compile.streamable_prefix(ops)
+        trailing_agg = (len(ops) >= 2 and k == len(ops) - 1
+                        and ops[-1]["op"] == "hash_agg"
+                        and key_col in ops[-1]["keys"])
+        wstore = tier_store(out.get("tier", "object"))
+        if k == len(ops) or trailing_agg:
+            pre_ops = ops[:-1] if trailing_agg else ops
+            acc = spill.PartitionAccumulator(r, acc_grant)
+            for m in morsels:
+                for p, pb in enumerate(engine_compile.run_pipeline_partition(
+                        m, pre_ops, key_col, r, backend=backend)):
+                    acc.add(p, pb)
+
+            def emit():
+                grant = budget.grant("partition_emit")
+                for p in range(r):
+                    sel = acc.take(p)
+                    # One partition materialized at a time — the chunked-
+                    # emission peak the accounting asserts. A partition
+                    # larger than the remaining headroom still has to
+                    # materialize to be written (force records it).
+                    grant.reserve(sel.nbytes(), force=True)
+                    if trailing_agg and sel.num_rows:
+                        sel = engine_compile.run_pipeline(
+                            sel, [ops[-1]], backend=backend)
+                    yield p, sel
+                    grant.release_all()
+
+            _write_shuffle(emit(), spec, metrics, wstore, registry)
+        else:
+            # Mid-chain barrier: stream what is provably exact, then run
+            # the unchanged driver over the accumulated remainder.
+            k = k if backend == "numpy" else 0
+            acc = spill.BatchAccumulator(acc_grant)
+            for m in morsels:
+                acc.add(m if k == 0 else
+                        engine_compile.run_pipeline(m, ops[:k],
+                                                    backend=backend))
+            full = acc.finalize()
+            parts = engine_compile.run_pipeline_partition(
+                full, ops[k:], key_col, r, backend=backend)
+            _write_shuffle(enumerate(parts), spec, metrics, wstore,
+                           registry)
+    else:
+        k = engine_compile.streamable_prefix(ops) \
+            if backend == "numpy" else 0
+        acc = spill.BatchAccumulator(acc_grant)
+        for m in morsels:
+            acc.add(m if k == 0 else
+                    engine_compile.run_pipeline(m, ops[:k],
+                                                backend=backend))
+        full = acc.finalize()
+        batch = engine_compile.run_pipeline_collect(full, ops[k:],
+                                                    backend=backend)
+        _write_collect(batch, spec, metrics, store)
+
+    metrics.spill_bytes = \
+        spill.SPILL_STATS["spill_bytes"] - stats_before["spill_bytes"]
+    metrics.spill_rounds = \
+        spill.SPILL_STATS["spill_rounds"] - stats_before["spill_rounds"]
+    metrics.mem_peak_bytes = budget.peak_bytes
+    metrics.mem_overcommit_bytes = budget.overcommit_bytes
+    metrics.mem_cap_bytes = budget.cap_bytes or 0
     return metrics
 
 
