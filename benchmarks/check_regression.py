@@ -42,6 +42,13 @@ ADAPTIVE_P99_MIN = 1.3              # adaptive vs static under chaos, p99
 # unbudgeted in-memory run at EQUAL row counts — spill trades bounded
 # memory for bandwidth, not for an order of magnitude of runtime.
 SPILL_OVERHEAD_MAX = 4.0
+# Worker-failure fault domain: lineage recovery (re-run exactly the dead
+# attempt under attempt-scoped commits) vs the stage-rerun-only static
+# baseline under the same seeded crash/OOM/invoke-fail schedule. The
+# sweep measures ~1.5x at the p99 (one killed fragment holds the whole
+# exchange barrier, and the static leg pays a full stage per kill); the
+# floor leaves margin for schedule drift when fault constants move.
+FAULT_RECOVERY_P99_MIN = 1.25
 
 
 def collect_speedups(obj, prefix="") -> dict[str, float]:
@@ -140,6 +147,19 @@ def check(current: dict, baseline: dict | None, tolerance: float,
             f"adaptive_chaos.p99_speedup: {p99:.3f}x < "
             f"{ADAPTIVE_P99_MIN}x — adaptive execution stopped beating "
             "the static coordinator at the tail under injected chaos")
+    fault = current.get("fault_recovery", {})
+    fp99 = fault.get("p99_speedup")
+    if fp99 is not None and fp99 < FAULT_RECOVERY_P99_MIN:
+        failures.append(
+            f"fault_recovery.p99_speedup: {fp99:.3f}x < "
+            f"{FAULT_RECOVERY_P99_MIN}x — lineage recovery stopped "
+            "beating whole-stage re-runs at the tail under injected "
+            "worker failures")
+    if fault and fault.get("kills", 0) + fault.get("ooms", 0) + \
+            fault.get("invoke_fails", 0) == 0:
+        failures.append(
+            "fault_recovery: the chaos sweep injected no faults — the "
+            "comparison gates nothing")
     return failures
 
 
@@ -190,6 +210,10 @@ def main(argv=None) -> int:
     if p99 is not None:
         print(f"  adaptive_chaos.p99_speedup: {p99:.3f}x "
               f"(min {ADAPTIVE_P99_MIN}x)")
+    fp99 = current.get("fault_recovery", {}).get("p99_speedup")
+    if fp99 is not None:
+        print(f"  fault_recovery.p99_speedup: {fp99:.3f}x "
+              f"(min {FAULT_RECOVERY_P99_MIN}x)")
     for key, slow in sorted(current.get("out_of_core", {}).items()):
         if key.endswith("spill_slowdown"):
             print(f"  out_of_core.{key}: {slow:.3f}x "

@@ -23,7 +23,12 @@ python -m pytest -q tests/test_chaos.py tests/test_adaptive.py
 # forces >= 2 spill rounds must collect bit-identical results.
 python -m pytest -q tests/test_out_of_core.py
 
-REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange,adaptive_chaos,out_of_core"
+# Worker-failure fault domain: crash/OOM/invoke-fail parity (bit-identical
+# under chaos, registry spy proving no uncommitted read), attempt-scoped
+# commits, circuit breakers, and the recovery escalation ladder.
+python -m pytest -q tests/test_fault_domain.py
+
+REQUIRED_SECTIONS="shuffle_elision,join_pipeline,dup_key_join,partition_fusion,pipeline,shuffle,concurrent_serving,tiered_exchange,adaptive_chaos,out_of_core,fault_recovery"
 python -m benchmarks.check_regression \
     --require-section "$REQUIRED_SECTIONS" "$@"
 

@@ -58,25 +58,44 @@ class Worker:
     last_used: float = 0.0
 
 
+class InvokeFailedError(RuntimeError):
+    """An invocation kept failing past the capped-backoff retry schedule.
+
+    Terminal for the stage attempt: the recovery ladder (stage re-run,
+    then a structured query failure) owns what happens next."""
+
+
 class ElasticPool:
     """FaaS-style pool: workers acquired per stage, released after, reused
     while warm. Purely time-model driven (no threads); the engine passes the
     simulation clock's now()."""
 
+    # Capped exponential backoff for failed invocations (cold-start
+    # errors): per-attempt draws are independent, so any failure
+    # probability < 1 converges; past ``invoke_max_attempts`` the
+    # invocation is terminal (``InvokeFailedError``).
+    invoke_max_attempts = 6
+    invoke_backoff_base_s = 0.1
+    invoke_backoff_cap_s = 2.0
+
     def __init__(self, binary_bytes: float = 8 * MIB,
                  limits: FaasLimits = FaasLimits(),
                  coldstart: ColdStartModel = ColdStartModel(),
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, chaos=None):
         self.binary_bytes = binary_bytes
         self.limits = limits
         self.coldstart = coldstart
         self._warm: list[Worker] = []
         self._next_id = 0
+        self._invoke_seq = 0
         self._scale_anchor_t: Optional[float] = None
         self._started_since_anchor = 0
         self._rng = np.random.default_rng(rng_seed)
+        self.chaos = chaos
         self.stats = {"cold_starts": 0, "warm_starts": 0, "invocations": 0,
-                      "worker_seconds": 0.0, "peak_warm": 0, "expired": 0}
+                      "worker_seconds": 0.0, "peak_warm": 0, "expired": 0,
+                      "invoke_faults": 0, "invoke_retry_s": 0.0,
+                      "speculative_denied": 0}
 
     # -- acquisition ---------------------------------------------------------
     def acquire(self, n: int, t: float) -> list[Worker]:
@@ -99,23 +118,56 @@ class ElasticPool:
         out: list[Worker] = []
         warm_available = list(self._warm)
         self._warm.clear()
-        for i in range(n):
-            if warm_available:
-                w = warm_available.pop()
-                w.cold = False
-                w.ready_at = t + invoke_latency + cs.warm_route_s
-                self.stats["warm_starts"] += 1
-            else:
-                delay = self._scaling_delay(t)
-                jitter = float(self._rng.lognormal(0.0, 0.35))
-                w = Worker(self._next_id,
-                           t + invoke_latency + delay +
-                           cs.cold_s(self.binary_bytes) * jitter, cold=True)
-                self._next_id += 1
-                self.stats["cold_starts"] += 1
-            out.append(w)
-        self._warm.extend(warm_available)
+        try:
+            for i in range(n):
+                retry_s = self._invoke_retry_delay()
+                if warm_available:
+                    w = warm_available.pop()
+                    w.cold = False
+                    w.ready_at = t + invoke_latency + retry_s + \
+                        cs.warm_route_s
+                    self.stats["warm_starts"] += 1
+                else:
+                    delay = self._scaling_delay(t)
+                    jitter = float(self._rng.lognormal(0.0, 0.35))
+                    w = Worker(self._next_id,
+                               t + invoke_latency + retry_s + delay +
+                               cs.cold_s(self.binary_bytes) * jitter,
+                               cold=True)
+                    self._next_id += 1
+                    self.stats["cold_starts"] += 1
+                out.append(w)
+        except InvokeFailedError:
+            # A terminally-failed acquire must not leak fleet capacity:
+            # workers already started for it go back to the warm set.
+            self._warm.extend(out)
+            raise
+        finally:
+            self._warm.extend(warm_available)
         return out
+
+    def _invoke_retry_delay(self) -> float:
+        """Injected invocation failures, retried with capped backoff.
+
+        Returns the accumulated backoff (added to the worker's ready_at)
+        once an attempt lands; raises ``InvokeFailedError`` when the
+        schedule is exhausted. Each invocation draws from its own
+        sequence number so the fault schedule is order-deterministic."""
+        seq = self._invoke_seq
+        self._invoke_seq += 1
+        if self.chaos is None:
+            return 0.0
+        delay = 0.0
+        for attempt in range(self.invoke_max_attempts):
+            if not self.chaos.invoke_fail(seq, attempt):
+                return delay
+            self.stats["invoke_faults"] += 1
+            backoff = min(self.invoke_backoff_base_s * (2 ** attempt),
+                          self.invoke_backoff_cap_s)
+            delay += backoff
+            self.stats["invoke_retry_s"] += backoff
+        raise InvokeFailedError(
+            f"invocation {seq} failed {self.invoke_max_attempts} attempts")
 
     def release(self, workers: list[Worker], t: float,
                 busy_s: float = 0.0) -> None:
@@ -159,14 +211,21 @@ class ProvisionedPool:
         self.slots = slots
         self.boot_s = boot_s
         self._free_at = [boot_s] * slots
-        self.stats = {"invocations": 0, "worker_seconds": 0.0}
+        self.stats = {"invocations": 0, "worker_seconds": 0.0,
+                      "speculative_denied": 0}
 
     def acquire(self, n: int, t: float) -> list[Worker]:
         self.stats["invocations"] += n
         out = []
+        # Spread one call over distinct slots, earliest-free first (an
+        # idle slot must not absorb the whole stage just because it is
+        # the argmin); cycle only when n exceeds the fleet. The
+        # authoritative occupancy is recorded by release().
+        free = list(self._free_at)
+        order = sorted(range(self.slots), key=lambda s: (free[s], s))
         for i in range(n):
-            slot = int(np.argmin(self._free_at))
-            start = max(t, self._free_at[slot])
+            slot = order[i % self.slots]
+            start = max(t, free[slot])
             out.append(Worker(slot, start, cold=False))
         return out
 
@@ -182,4 +241,10 @@ class ProvisionedPool:
 
     def release(self, workers: list[Worker], t: float,
                 busy_s: float = 0.0) -> None:
-        self.stats["worker_seconds"] += busy_s * len(workers)
+        # Mirror ElasticPool.release: bill busy time per worker AND record
+        # slot occupancy, so the next stage queues behind busy slots
+        # instead of seeing an always-idle fleet (cost under-billing).
+        for w in workers:
+            self.stats["worker_seconds"] += busy_s
+            self._free_at[w.worker_id] = max(
+                self._free_at[w.worker_id], w.ready_at + busy_s)

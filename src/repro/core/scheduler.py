@@ -14,7 +14,20 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.elastic_pool import ElasticPool, ProvisionedPool
+from repro.core.elastic_pool import ElasticPool, InvokeFailedError, \
+    ProvisionedPool
+
+
+def _recoverable(exc: BaseException) -> bool:
+    """Failures the multi-query recovery ladder owns: worker kills/OOMs,
+    terminally-failed invocations, and store brownouts. Anything else
+    (a real bug, a validation error) propagates untouched."""
+    from repro.core.storage_service import CircuitOpenError, \
+        ThrottledError, UnavailableError
+    from repro.engine.worker import WorkerKilled
+    return isinstance(exc, (WorkerKilled, InvokeFailedError,
+                            CircuitOpenError, ThrottledError,
+                            UnavailableError))
 
 
 @dataclasses.dataclass
@@ -25,6 +38,12 @@ class Fragment:
     work: Callable[[], object]          # executes the real operator work
     est_duration_s: float = 0.1         # model-time duration (simulation)
     input_bytes: float = 0.0
+    # Optional kwargs-accepting re-execution hook (``attempt=``,
+    # ``memory_budget=``): the engine coordinator sets it so the recovery
+    # layer can re-run exactly the dead attempt under a new attempt
+    # number (and a spill budget after an OOM kill) without the base
+    # ``work`` signature changing for non-engine callers.
+    rerun: Optional[Callable] = None
 
 
 @dataclasses.dataclass
@@ -48,6 +67,9 @@ class StageResult:
     # duplicate finished first. Zero under the base scheduler.
     speculative_launched: int = 0
     speculative_won: int = 0
+    # Fragment attempts re-run in place after a worker kill/OOM
+    # (engine.adaptive lineage recovery). Zero under the base scheduler.
+    recovered_attempts: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +137,26 @@ class StageScheduler:
         retried = 0
         node_seconds = 0.0
         for i, (frag, w) in enumerate(zip(stage.fragments, workers)):
-            results[i] = frag.work()
+            try:
+                results[i] = frag.work()
+            except Exception as exc:
+                # A fragment died (worker kill, OOM, terminal store
+                # error). The fleet still ran until the failure: charge
+                # the dead attempt's modeled duration, release every
+                # worker, and surface the elapsed model time so the
+                # recovery layer restarts after it instead of for free.
+                dur = self._noisy_duration(frag.est_duration_s)
+                if self.chaos is not None:
+                    dur *= self.chaos.slow_multiplier(stage.name,
+                                                      frag.fragment_id)
+                end_times[i] = w.ready_at + dur
+                node_seconds += dur
+                elapsed_end = float(end_times.max()) if n else t
+                self.pool.release(workers, elapsed_end,
+                                  busy_s=node_seconds / max(n, 1))
+                exc.elapsed_s = max(0.0, elapsed_end - t)
+                exc.node_seconds = node_seconds
+                raise
             dur = self._noisy_duration(frag.est_duration_s)
             if self.chaos is not None:
                 dur *= self.chaos.slow_multiplier(stage.name,
@@ -170,6 +211,14 @@ class QueryJob:
     started: set = dataclasses.field(default_factory=set)
     admit_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # Worker-failure recovery bookkeeping: failed stage attempts so far,
+    # the earliest time each failed stage may be retried (the dead
+    # attempt's elapsed model time is charged), and the structured
+    # failure record once the retry budget is exhausted — the serving
+    # layer surfaces it as ``QueryResult.failure`` instead of raising.
+    stage_attempts: dict = dataclasses.field(default_factory=dict)
+    retry_at: dict = dataclasses.field(default_factory=dict)
+    failure: Optional[dict] = None
 
     def __post_init__(self):
         if not self.cost:
@@ -196,9 +245,18 @@ class MultiQueryScheduler(StageScheduler):
 
     def __init__(self, pool, policy: StragglerPolicy = StragglerPolicy(),
                  budget: int = 64, straggler_prob: float = 0.02,
-                 rng_seed: int = 0, chaos=None):
+                 rng_seed: int = 0, chaos=None,
+                 speculation_headroom: int = 0, stage_retries: int = 2):
         super().__init__(pool, policy, straggler_prob, rng_seed, chaos=chaos)
         self.budget = budget
+        # Workers held back from first-attempt dispatch so speculative
+        # duplicates and recovery retries never starve behind a fully
+        # packed budget (ROADMAP item 3 remainder).
+        self.speculation_headroom = min(speculation_headroom,
+                                        max(0, budget - 1))
+        # Failed stage attempts tolerated per (job, stage) before the job
+        # fails with a structured record instead of an exception.
+        self.stage_retries = stage_retries
 
     def run_jobs(self, jobs: Sequence[QueryJob], admitter=None
                  ) -> list[QueryJob]:
@@ -221,6 +279,9 @@ class MultiQueryScheduler(StageScheduler):
                     waiting.append(job)
             pending = waiting
             # 2. dispatch ready stages FIFO while they fit the budget
+            # (minus the speculation headroom, reserved for duplicates
+            # and recovery retries)
+            cap = self.budget - self.speculation_headroom
             for job in admitted:
                 if job.done:
                     continue
@@ -228,12 +289,37 @@ class MultiQueryScheduler(StageScheduler):
                     if stage.name in job.started or \
                             not all(d in job.results for d in stage.deps):
                         continue
+                    if t < job.retry_at.get(stage.name, 0.0):
+                        continue   # charged for a dead attempt; wait
                     width = len(stage.fragments)
-                    if used and used + width > self.budget:
+                    if used and used + width > cap:
                         continue
                     # Deps recorded in job.results completed at <= t and
                     # admit_t <= t, so the stage starts exactly at t.
-                    res = self.run_stage(stage, t)
+                    try:
+                        res = self.run_stage(stage, t)
+                    except Exception as exc:
+                        if not _recoverable(exc):
+                            raise
+                        progressed = True
+                        attempts = job.stage_attempts.get(stage.name,
+                                                          0) + 1
+                        job.stage_attempts[stage.name] = attempts
+                        elapsed = getattr(exc, "elapsed_s", 0.0)
+                        if attempts <= self.stage_retries:
+                            job.retry_at[stage.name] = t + elapsed
+                        else:
+                            # Retry budget exhausted: the job fails with
+                            # a structured record; other jobs continue.
+                            job.failure = {
+                                "kind": getattr(exc, "kind",
+                                                type(exc).__name__),
+                                "stage": stage.name,
+                                "attempts": attempts,
+                                "message": str(exc)}
+                            job.finish_t = t + elapsed
+                            done += 1
+                        break
                     job.started.add(stage.name)
                     used += width
                     heapq.heappush(running, (res.end_t, seq, width, job,
@@ -244,6 +330,12 @@ class MultiQueryScheduler(StageScheduler):
                 continue
             # 3. stalled: advance model time to the next event
             events = [running[0][0]] if running else []
+            for job in admitted:
+                if job.done:
+                    continue
+                for name, at in job.retry_at.items():
+                    if at > t and name not in job.started:
+                        events.append(at)
             for job in pending:
                 if job.submit_t > t:
                     events.append(job.submit_t)

@@ -227,6 +227,82 @@ class ThrottledError(RuntimeError):
     """Raised when the partition model rejects a request (HTTP 503 analog)."""
 
 
+class UnavailableError(RuntimeError):
+    """Raised when a tier browns out (HTTP 500/503 storm analog).
+
+    Retryable — a backoff loop may succeed — but unlike ``ThrottledError``
+    it also feeds the tier's circuit breaker: enough of these in a row and
+    the breaker trips open, converting further requests into fast-failing
+    ``CircuitOpenError`` so callers stop camping on backoff."""
+
+
+class CircuitOpenError(RuntimeError):
+    """Fast-fail raised while a tier's circuit breaker is open. Terminal:
+    retrying the same tier cannot help; callers should re-place the work
+    on a healthy tier (the adaptive boundary demotes KV shuffles to the
+    object store)."""
+
+
+class CircuitBreaker:
+    """Classic three-state breaker over a storage tier.
+
+    * ``closed`` — requests flow; ``failure_threshold`` *consecutive*
+      ``UnavailableError``s trip it open.
+    * ``open`` — every request fast-fails with ``CircuitOpenError`` (no
+      latency, no billed request) until ``reset_timeout_s`` of model time
+      passes.
+    * ``half_open`` — one probe request is let through; success closes the
+      breaker, failure re-opens it immediately.
+
+    Only ``UnavailableError`` counts as a breaker failure: throttles are
+    the partition model doing its job and missing keys are the caller's
+    problem, neither says the tier is down.
+    """
+
+    def __init__(self, failure_threshold: int = 4,
+                 reset_timeout_s: float = 30.0):
+        self.failure_threshold = failure_threshold
+        self.reset_timeout_s = reset_timeout_s
+        self.state = "closed"
+        self._consecutive = 0
+        self._opened_at = 0.0
+        self.failures = 0
+        self.trips = 0
+        self.fast_fails = 0
+        self.probes = 0
+
+    def allow(self, t: float) -> bool:
+        if self.state == "closed":
+            return True
+        if self.state == "open" and \
+                t - self._opened_at >= self.reset_timeout_s:
+            self.state = "half_open"
+            self.probes += 1
+            return True
+        self.fast_fails += 1
+        return False
+
+    def record_success(self) -> None:
+        self._consecutive = 0
+        if self.state == "half_open":
+            self.state = "closed"
+
+    def record_failure(self, t: float) -> None:
+        self.failures += 1
+        self._consecutive += 1
+        if self.state == "half_open" or \
+                self._consecutive >= self.failure_threshold:
+            if self.state != "open":
+                self.trips += 1
+            self.state = "open"
+            self._opened_at = t
+
+    def stats(self) -> dict:
+        return {"state": self.state, "failures": self.failures,
+                "trips": self.trips, "fast_fails": self.fast_fails,
+                "probes": self.probes}
+
+
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """Capped exponential backoff + full jitter (paper cites Brooker [53]).
@@ -243,6 +319,12 @@ class RetryPolicy:
 
     def backoff_s(self, attempt: int) -> float:
         return min(self.backoff_base_s * (2 ** attempt), self.backoff_cap_s)
+
+    def is_retryable(self, exc: BaseException) -> bool:
+        """Classify an error: retryable (transient — throttles, brownouts)
+        vs terminal (missing key, open circuit breaker). Terminal errors
+        must fail fast instead of burning the full backoff schedule."""
+        return isinstance(exc, (ThrottledError, UnavailableError))
 
 
 OBJECT_RETRY = RetryPolicy(max_attempts=6, backoff_base_s=0.05,
@@ -279,9 +361,27 @@ class ObjectStore:
         # Optional fault injection (core.chaos.ChaosPolicy); assignable
         # after construction so a shared store can be perturbed per run.
         self.chaos = chaos
+        # Optional circuit breaker over this tier (the KV tier ships one
+        # by default). ``None`` means requests never fast-fail.
+        self.breaker: Optional[CircuitBreaker] = None
+
+    # -- fault gate ---------------------------------------------------------
+    def _guard(self, key: str) -> None:
+        """Breaker fast-fail + injected brownouts, before the request."""
+        if self.breaker is not None and not self.breaker.allow(self._clock()):
+            raise CircuitOpenError(key)
+        if self.chaos is not None and self.chaos.unavailable(key):
+            if self.breaker is not None:
+                self.breaker.record_failure(self._clock())
+            with self._lock:
+                self.stats.throttled += 1  # billed like any failed request
+            raise UnavailableError(key)
+        if self.breaker is not None:
+            self.breaker.record_success()
 
     # -- S3-shaped API ------------------------------------------------------
     def put(self, key: str, data: bytes) -> None:
+        self._guard(key)
         self._admit(key, write=True, nbytes=len(data))
         if self.chaos is not None and self.chaos.drop_write(key):
             # Lost write: billed and acknowledged to the caller (its
@@ -309,6 +409,7 @@ class ObjectStore:
             return self._etags[key]
 
     def get(self, key: str, byte_range: Optional[tuple[int, int]] = None) -> bytes:
+        self._guard(key)
         if self.chaos is not None and self.chaos.throttle(key, self._clock()):
             with self._lock:
                 self.stats.throttled += 1
@@ -381,7 +482,13 @@ class ObjectStore:
         while True:
             try:
                 return self.get(key)
-            except ThrottledError:
+            except (ThrottledError, UnavailableError, CircuitOpenError,
+                    KeyError) as exc:
+                if not policy.is_retryable(exc):
+                    # Terminal: a missing key after a confirmed commit or
+                    # an open breaker won't heal by waiting — fail fast
+                    # instead of burning the full backoff schedule.
+                    raise
                 attempt += 1
                 if attempt >= policy.max_attempts:
                     raise
@@ -409,3 +516,8 @@ class KVStore(ObjectStore):
         self.profile = KV_MEMORY_PROFILE
         self.prices = pricing.KV_MEMORY
         self.retry = KV_RETRY
+        # The memory tier is the one that browns out under contention in
+        # the paper's measurements — it ships with a breaker so a dark
+        # tier degrades to fast CircuitOpenError + object-store demotion
+        # instead of stalling every request on the backoff schedule.
+        self.breaker = CircuitBreaker()

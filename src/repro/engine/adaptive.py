@@ -95,6 +95,15 @@ class AdaptivePolicy:
     barrier_cov_percent: float = 22.65
     barrier_safety: float = 1.2
     max_recover_attempts: int = 2
+    # Lineage recovery: how many times ONE fragment may be re-attempted
+    # in place after a worker kill/OOM before the failure escalates to a
+    # stage re-run (and then, past ``max_recover_attempts``, to a
+    # structured query-level failure). The static baseline has no
+    # in-place retry — every kill costs it a stage re-run.
+    max_fragment_attempts: int = 3
+    # Cap on speculative duplicates per stage (None = unlimited); denied
+    # launches surface as ``speculative_denied`` in pool stats.
+    max_speculative: Optional[int] = None
 
 
 ADAPTIVE = AdaptivePolicy()
@@ -115,55 +124,124 @@ class SpeculativeStageScheduler(StageScheduler):
     def __init__(self, pool, policy: StragglerPolicy = StragglerPolicy(),
                  straggler_prob: float = 0.02, rng_seed: int = 0,
                  chaos=None, barrier_cov_percent: float = 22.65,
-                 barrier_safety: float = 1.2):
+                 barrier_safety: float = 1.2,
+                 max_fragment_attempts: int = 3,
+                 max_speculative: Optional[int] = None):
         super().__init__(pool, policy, straggler_prob, rng_seed, chaos=chaos)
         self.barrier_cov_percent = barrier_cov_percent
         self.barrier_safety = barrier_safety
+        self.max_fragment_attempts = max_fragment_attempts
+        self.max_speculative = max_speculative
+        # Recovery trace sink: the adaptive coordinator points this at the
+        # current query's trace list so ``recover:`` lines reach explain.
+        self.trace: Optional[list] = None
 
     def _run_stage(self, stage: Stage, t: float) -> StageResult:
         n = len(stage.fragments)
         workers = self.pool.acquire(n, t)
         results: list[object] = [None] * n
         end = t
-        launched = won = 0
+        launched = won = recovered = 0
         node_seconds = 0.0
         mult = expected_max_multiplier(n, self.barrier_cov_percent,
                                        self.barrier_safety)
-        for i, (frag, w) in enumerate(zip(stage.fragments, workers)):
-            results[i] = frag.work()
-            dur = self._noisy_duration(frag.est_duration_s)
-            if self.chaos is not None:
-                dur *= self.chaos.slow_multiplier(stage.name,
-                                                  frag.fragment_id)
-            start = w.ready_at
-            completion = start + dur
-            node_seconds += dur
-            barrier = frag.est_duration_s * mult
-            if frag.est_duration_s > 0 and dur > barrier:
-                # Beyond the expected max of n draws: duplicate the
-                # fragment for real (idempotent; see class docstring) and
-                # race it against the original.
-                launched += 1
-                frag.work()
-                dup = self._noisy_duration(frag.est_duration_s)
+        try:
+            for i, (frag, w) in enumerate(zip(stage.fragments, workers)):
+                start = w.ready_at
+                attempt = 0
+                # Lineage recovery, in place: a killed attempt is charged
+                # its modeled duration, then ONLY the dead attempt re-runs
+                # under a new attempt number (an OOM kill re-runs with the
+                # chaos threshold as its memory budget, so the retry takes
+                # the spill path). Past the attempt budget the kill
+                # escalates to the coordinator's stage-level ladder.
+                while True:
+                    try:
+                        if attempt == 0 or frag.rerun is None:
+                            results[i] = frag.work()
+                        else:
+                            results[i] = frag.rerun(**rerun_kwargs)
+                        break
+                    except worker.WorkerKilled as exc:
+                        dead = self._noisy_duration(frag.est_duration_s)
+                        if self.chaos is not None:
+                            dead *= self.chaos.slow_multiplier(
+                                stage.name, frag.fragment_id,
+                                attempt=attempt)
+                        node_seconds += dead
+                        start += dead
+                        end = max(end, start)
+                        attempt += 1
+                        if frag.rerun is None or \
+                                attempt >= self.max_fragment_attempts:
+                            raise
+                        recovered += 1
+                        rerun_kwargs = {"attempt": attempt}
+                        if isinstance(exc, worker.WorkerOOMKilled):
+                            rerun_kwargs["memory_budget"] = \
+                                float(exc.threshold_bytes)
+                        if self.trace is not None:
+                            how = ("with a "
+                                   f"{exc.threshold_bytes / 2**20:.1f} "
+                                   "MiB spill budget"
+                                   if isinstance(exc,
+                                                 worker.WorkerOOMKilled)
+                                   else "under a fresh attempt key")
+                            self.trace.append(
+                                f"recover: fragment {frag.fragment_id} of "
+                                f"'{stage.name}' killed ({exc.kind}, "
+                                f"attempt {attempt - 1}); re-ran only the "
+                                f"dead attempt {how}")
+                dur = self._noisy_duration(frag.est_duration_s)
                 if self.chaos is not None:
-                    # The duplicate is a fresh invocation: it draws its
-                    # own chaos slowdown (attempt-keyed), independent of
-                    # whatever slowed the original.
-                    dup *= self.chaos.slow_multiplier(
-                        stage.name, frag.fragment_id, attempt=1)
-                dup_completion = start + barrier + dup
-                node_seconds += min(dup, max(0.0, dur - barrier))
-                if dup_completion < completion:
-                    completion = dup_completion
-                    won += 1
-            end = max(end, completion)
+                    dur *= self.chaos.slow_multiplier(stage.name,
+                                                      frag.fragment_id,
+                                                      attempt=attempt)
+                completion = start + dur
+                node_seconds += dur
+                barrier = frag.est_duration_s * mult
+                if frag.est_duration_s > 0 and dur > barrier:
+                    if self.max_speculative is not None \
+                            and launched >= self.max_speculative:
+                        self.pool.stats["speculative_denied"] = \
+                            self.pool.stats.get("speculative_denied", 0) + 1
+                    else:
+                        # Beyond the expected max of n draws: duplicate
+                        # the fragment for real (idempotent; see class
+                        # docstring) and race it against the original.
+                        launched += 1
+                        frag.work()
+                        dup = self._noisy_duration(frag.est_duration_s)
+                        if self.chaos is not None:
+                            # The duplicate is a fresh invocation: it
+                            # draws its own chaos slowdown (attempt-
+                            # keyed), independent of whatever slowed the
+                            # original.
+                            dup *= self.chaos.slow_multiplier(
+                                stage.name, frag.fragment_id,
+                                attempt=attempt + 1)
+                        dup_completion = start + barrier + dup
+                        node_seconds += min(dup, max(0.0, dur - barrier))
+                        if dup_completion < completion:
+                            completion = dup_completion
+                            won += 1
+                end = max(end, completion)
+        except Exception as exc:
+            # Escalation: charge what ran, release the fleet, surface the
+            # elapsed model time for the stage-level recovery ladder.
+            elapsed_end = max(end, t)
+            self.pool.release(workers, elapsed_end,
+                              busy_s=node_seconds / max(n, 1))
+            exc.elapsed_s = max(0.0, elapsed_end - t)
+            exc.node_seconds = node_seconds
+            raise
         self.pool.release(workers, end, busy_s=node_seconds / max(n, 1))
         return StageResult(stage.name, t, end, n, results,
                            retried_fragments=launched,
                            node_seconds=node_seconds,
                            speculative_launched=launched,
-                           speculative_won=won)
+                           speculative_won=won,
+                           recovered_attempts=recovered)
 
 
 class AdaptiveCoordinator(Coordinator):
@@ -183,7 +261,9 @@ class AdaptiveCoordinator(Coordinator):
                 self.pool, StragglerPolicy(), rng_seed=rng_seed,
                 chaos=chaos,
                 barrier_cov_percent=policy.barrier_cov_percent,
-                barrier_safety=policy.barrier_safety)
+                barrier_safety=policy.barrier_safety,
+                max_fragment_attempts=policy.max_fragment_attempts,
+                max_speculative=policy.max_speculative)
 
     # ------------------------------------------------------------------
     def execute(self, plan: QueryPlan, query_id: Optional[str] = None
@@ -207,6 +287,8 @@ class AdaptiveCoordinator(Coordinator):
         # start before the boundary at which demotion was decided.
         min_start: dict[str, float] = {}
         self._replan_count = 0
+        if hasattr(self.scheduler, "trace"):
+            self.scheduler.trace = trace
         idx = 0
         while idx < len(plan.pipelines):
             pipe = plan.pipelines[idx]
@@ -229,9 +311,11 @@ class AdaptiveCoordinator(Coordinator):
             stages[pipe.name] = stage
             start = max([min_start.get(pipe.name, 0.0)] +
                         [results[d].end_t for d in stage.deps]) + repair_dur
-            results[pipe.name] = self._run_with_recovery(stage, start,
-                                                         stages, results,
-                                                         trace)
+            results[pipe.name] = self._run_with_recovery(
+                plan, pipe, stage, start, stages, results, trace,
+                query_id=query_id, registry=registry,
+                frag_counts=frag_counts, shuffle_spec=shuffle_spec,
+                tier_spec=tier_spec)
             idx += 1
         return self.finalize(plan, query_id, frag_counts, results,
                              stats_before, shape_hash, cache_hit,
@@ -240,19 +324,71 @@ class AdaptiveCoordinator(Coordinator):
                              replans=self._replan_count)
 
     # -- fault recovery -------------------------------------------------
-    def _run_with_recovery(self, stage: Stage, start: float,
+    def _run_with_recovery(self, plan: QueryPlan, pipe: Pipeline,
+                           stage: Stage, start: float,
                            stages: dict[str, Stage],
                            results: dict[str, StageResult],
-                           trace: list[str]) -> StageResult:
+                           trace: list[str], *, query_id: str,
+                           registry: worker.ShuffleRegistry,
+                           frag_counts: dict[str, int],
+                           shuffle_spec: dict[str, int],
+                           tier_spec: dict[str, str]) -> StageResult:
+        """Stage-level rung of the recovery ladder (above the in-place
+        attempt retries of ``SpeculativeStageScheduler``, below the
+        structured query failure):
+
+        * **worker kill / OOM / failed invocation** — the stage's objects
+          are intact (a killed attempt never commits), so only the stage
+          itself re-runs;
+        * **store brownout** (``UnavailableError`` / an open circuit
+          breaker) — every kv exchange this stage touches (its own output
+          and its deps') is demoted to the object store, the affected
+          producers re-run under the demoted placement, and the stage is
+          recompiled before the retry — brownout, not outage;
+        * **anything else** (a lost shuffle write surfacing at read time)
+          — coarse lineage recovery: every producer stage re-executes in
+          full, then the stage retries.
+
+        Past ``policy.max_recover_attempts`` the failure surfaces as a
+        ``QueryFailedError`` carrying a structured failure record."""
+        from repro.engine.coordinator import QueryFailedError
         attempts = 0
         while True:
             try:
                 return self.scheduler.run_stage(stage, start)
             except RuntimeError as exc:
                 attempts += 1
-                if attempts > self.policy.max_recover_attempts \
-                        or not stage.deps:
-                    raise
+                start += getattr(exc, "elapsed_s", 0.0)
+                if attempts > self.policy.max_recover_attempts:
+                    raise QueryFailedError(query_id, stage.name, attempts,
+                                           exc) from exc
+                if isinstance(exc, (storage_service.UnavailableError,
+                                    storage_service.CircuitOpenError)):
+                    demoted = self._demote_kv_exchanges(
+                        plan, pipe, stage, start, stages, results,
+                        query_id=query_id, registry=registry,
+                        frag_counts=frag_counts,
+                        shuffle_spec=shuffle_spec, tier_spec=tier_spec)
+                    if demoted:
+                        stage = self._compile_pipeline(
+                            plan, pipe, query_id, registry, frag_counts,
+                            shuffle_spec, tier_spec)
+                        stages[pipe.name] = stage
+                        self._replan_count += 1
+                        trace.append(
+                            f"recover: kv exchange browned out under "
+                            f"stage '{stage.name}'; demoted "
+                            f"{demoted} shuffle placement(s) to the "
+                            "object store and retried")
+                        continue
+                if isinstance(exc, worker.WorkerKilled) or not stage.deps:
+                    # The dead attempt never committed: inputs are
+                    # intact, so only this stage re-runs.
+                    trace.append(
+                        f"recover: stage '{stage.name}' lost a worker "
+                        f"({getattr(exc, 'kind', 'crash')}); re-ran the "
+                        f"stage (attempt {attempts + 1})")
+                    continue
                 # Coarse lineage recovery (the static baseline): the
                 # failed read cannot name which producer fragment lost a
                 # write, so every producer stage re-executes in full
@@ -269,6 +405,45 @@ class AdaptiveCoordinator(Coordinator):
                     f"write; re-executed producer stage(s) "
                     f"{list(stage.deps)} in full and retried ({exc})")
                 start = rec_end
+
+    def _demote_kv_exchanges(self, plan: QueryPlan, pipe: Pipeline,
+                             stage: Stage, start: float,
+                             stages: dict[str, Stage],
+                             results: dict[str, StageResult], *,
+                             query_id: str,
+                             registry: worker.ShuffleRegistry,
+                             frag_counts: dict[str, int],
+                             shuffle_spec: dict[str, int],
+                             tier_spec: dict[str, str]) -> int:
+        """Move every kv exchange the failed stage touches onto the
+        object store: the stage's own output placement flips, and any dep
+        whose shuffle lives on the dark tier is re-produced under the
+        demoted placement (idempotent re-execution, commits unchanged).
+        Returns the number of demoted placements."""
+        demoted = 0
+        if isinstance(pipe.output, ShuffleOutput) \
+                and pipe.output.tier == "kv":
+            pipe.output.tier = "object"
+            tier_spec[pipe.name] = "object"
+            demoted += 1
+        for dep in stage.deps:
+            if tier_spec.get(dep) != "kv" or dep not in stages:
+                continue
+            dep_pipe = next(p for p in plan.pipelines if p.name == dep)
+            if isinstance(dep_pipe.output, ShuffleOutput):
+                dep_pipe.output.tier = "object"
+            tier_spec[dep] = "object"
+            dep_stage = self._compile_pipeline(plan, dep_pipe, query_id,
+                                               registry, frag_counts,
+                                               shuffle_spec, tier_spec)
+            stages[dep] = dep_stage
+            rres = self.scheduler.run_stage(dep_stage, start)
+            prev = results[dep]
+            prev.node_seconds += rres.node_seconds
+            prev.retried_fragments += rres.worker_count
+            prev.end_t = max(prev.end_t, rres.end_t)
+            demoted += 1
+        return demoted
 
     def _repair_lost(self, pipe: Pipeline, query_id: str,
                      registry: worker.ShuffleRegistry,
@@ -292,10 +467,12 @@ class AdaptiveCoordinator(Coordinator):
             lost = []
             for w in range(frag_counts[dep]):
                 bm = registry.bitmap(query_id, dep, w) or 0
+                att = registry.committed_attempt(query_id, dep, w) or 0
                 part = 0
                 while bm:
                     if bm & 1:
-                        key = worker.shuffle_key(query_id, dep, w, part)
+                        key = worker.shuffle_key(query_id, dep, w, part,
+                                                 attempt=att)
                         try:
                             st.size(key)
                         except KeyError:
@@ -309,7 +486,14 @@ class AdaptiveCoordinator(Coordinator):
             res = results[dep]
             for w in lost:
                 frag = stages[dep].fragments[w]
-                frag.work()      # first writer wins; re-put is identical
+                att = registry.committed_attempt(query_id, dep, w) or 0
+                # First writer wins; the re-put is byte-identical. The
+                # duplicate re-runs the COMMITTED attempt so the healed
+                # object lands under the key readers will resolve.
+                if att and frag.rerun is not None:
+                    frag.rerun(attempt=att)
+                else:
+                    frag.work()
                 dur = self.scheduler._noisy_duration(frag.est_duration_s)
                 if self.chaos is not None:
                     dur *= self.chaos.slow_multiplier(dep, w, attempt=2)
@@ -355,12 +539,13 @@ class AdaptiveCoordinator(Coordinator):
         total = 0.0
         for w in range(frag_counts.get(name, 0)):
             bm = registry.bitmap(query_id, name, w) or 0
+            att = registry.committed_attempt(query_id, name, w) or 0
             part = 0
             while bm:
                 if bm & 1:
                     try:
                         total += st.size(worker.shuffle_key(
-                            query_id, name, w, part))
+                            query_id, name, w, part, attempt=att))
                     except KeyError:
                         pass
                 bm >>= 1
@@ -487,13 +672,23 @@ class AdaptiveCoordinator(Coordinator):
                                            shuffle_spec)
             placed = breakeven.place_exchange_from_bench(
                 est_out, writers, out.partitions)
-            if placed.tier != out.tier:
+            target = placed.tier
+            breaker = getattr(self.kv_store, "breaker", None)
+            if target == "kv" and breaker is not None \
+                    and breaker.state != "closed":
+                # The kv tier's circuit is open (or probing): break-even
+                # or not, new placements stay off the dark tier.
+                trace.append(
+                    f"adaptive: kv tier circuit {breaker.state}; pinned "
+                    f"'{pipe.name}' exchange to the object store")
+                target = "object"
+            if target != out.tier:
                 old_tier = out.tier
-                out.tier = placed.tier
+                out.tier = target
                 self._replan_count += 1
                 trace.append(
                     f"adaptive: moved '{pipe.name}' exchange {old_tier} "
-                    f"-> {placed.tier} tier at observed "
+                    f"-> {target} tier at observed "
                     f"{est_out / 2**20:.1f} MiB (break-even re-placement)")
 
     def _maybe_flip(self, plan: QueryPlan, pipe: Pipeline, query_id: str,

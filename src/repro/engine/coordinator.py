@@ -88,6 +88,29 @@ def _request_barrier(tier: str, op: str, n: int) -> float:
     return waves * model.quantile(m / (m + 1.0))
 
 
+class QueryFailedError(RuntimeError):
+    """A query exhausted its recovery ladder (fragment retries, then
+    stage re-runs) and cannot produce a result.
+
+    Carries a structured ``failure`` dict — ``{"kind", "stage",
+    "attempts", "message"}`` — so the serving layer can surface a clean
+    per-query error (``QueryResult.failure``) instead of a traceback."""
+
+    def __init__(self, query_id: str, stage: str, attempts: int,
+                 cause: BaseException):
+        self.query_id = query_id
+        self.failure = {
+            "kind": getattr(cause, "kind", type(cause).__name__),
+            "stage": stage,
+            "attempts": attempts,
+            "message": str(cause),
+        }
+        super().__init__(
+            f"query {query_id!r} failed at stage {stage!r} after "
+            f"{attempts} recovery attempt(s): "
+            f"[{self.failure['kind']}] {cause}")
+
+
 @dataclasses.dataclass
 class QueryResult:
     name: str
@@ -121,6 +144,11 @@ class QueryResult:
     # fragments, and the largest per-fragment accounted memory peak.
     spill_bytes: int = 0
     mem_peak_bytes: int = 0
+    # Structured failure surfaced by the serving layer when the recovery
+    # ladder is exhausted: {"kind", "stage", "attempts", "message"}.
+    # None for successful queries; a failed query carries an empty
+    # result batch alongside it.
+    failure: Optional[dict] = None
 
 
 class Coordinator:
@@ -148,7 +176,7 @@ class Coordinator:
         self.burst_aware = burst_aware
         self.max_workers = max_workers
         if mode == "elastic":
-            self.pool = ElasticPool(rng_seed=rng_seed)
+            self.pool = ElasticPool(rng_seed=rng_seed, chaos=chaos)
             self.bucket = token_bucket.LAMBDA_INBOUND
         else:
             # Paper Table 6: "the VMs are started before the experiment".
@@ -333,20 +361,31 @@ class Coordinator:
                                        shuffle_spec, tier_spec)
             frag = Fragment(fragment_id=i, work=None)
 
-            def work(s=spec, f=frag):
+            def work(s=spec, f=frag, attempt=0, memory_budget=None):
                 # Estimate at execution time, not compile time:
                 # shuffle intermediates do not exist when the plan
                 # compiles, but by a stage's start its producers
                 # have written, so the scheduler (which reads the
                 # estimate after running the work) models
                 # shuffle-heavy stages on the bytes they REALLY
-                # move.
+                # move. Recovery re-runs pass ``attempt`` (so shuffle
+                # writes land under a fresh attempt key) and, after an
+                # OOM kill, a ``memory_budget`` that forces the spill
+                # path.
+                if attempt or memory_budget is not None:
+                    s = dataclasses.replace(
+                        s, attempt=attempt,
+                        memory_budget=(memory_budget
+                                       if memory_budget is not None
+                                       else s.memory_budget))
                 f.est_duration_s, f.input_bytes = self._estimate(s)
                 return worker.execute_fragment(self.store, s,
                                                registry=registry,
-                                               kv_store=self.kv_store)
+                                               kv_store=self.kv_store,
+                                               chaos=self.chaos)
 
             frag.work = work
+            frag.rerun = work
             fragments.append(frag)
         return Stage(pipe.name, fragments, deps=pipe.deps())
 

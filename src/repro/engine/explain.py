@@ -84,6 +84,12 @@ def format_adaptive(result) -> str:
     lines.append(f"counters: replans={result.replans} "
                  f"speculative_launched={result.speculative_launched} "
                  f"speculative_won={result.speculative_won}")
+    failure = getattr(result, "failure", None)
+    if failure is not None:
+        lines.append(
+            f"FAILED: [{failure['kind']}] stage {failure['stage']!r} "
+            f"after {failure['attempts']} attempt(s) — "
+            f"{failure['message']}")
     lines.append("stage timings")
     for name, m in result.stage_metrics.items():
         lines.append(f"  {name}: start={m['start']:.3f}s "

@@ -19,14 +19,19 @@ traces whole); the numpy backend keeps the interpreted reference
 semantics. Legacy ``FragmentSpec.join`` specs are normalized into a
 leading ``hash_join`` op.
 
-Shuffle hardening: each writer reports the bitmap of partitions it
-actually wrote (``FragmentMetrics.partitions_written``) and records it in
-the query's ``ShuffleRegistry``. ``missing_ok`` readers consult the
-registry for every absent shuffle object: a clear bit is a skipped-empty
-partition (fine, zero rows); a set bit means the object was written and
-lost (or mis-keyed) and the read fails loudly instead of silently
-dropping rows. Absences with no recorded bitmap keep the legacy tolerant
-behaviour (standalone fragments executed without a registry).
+Shuffle hardening: shuffle objects are **attempt-scoped** — every key
+carries the writing attempt's number, and a fragment publishes its
+attempt only through an explicit end-of-write ``ShuffleRegistry.commit``
+(first committer wins; later attempts are quarantined). A worker that
+dies mid-write (``WorkerKilled`` — injected by ``core.chaos``) leaves
+only unreachable garbage: readers resolve every shuffle key through the
+committed attempt (``resolve_committed``) and refuse to read a writer
+with no commit, so a consumer can never observe a partial write. Within
+a committed attempt, each writer's partition bitmap
+(``FragmentMetrics.partitions_written``) still tells a skipped-empty
+partition (clear bit, fine) from a lost write (set bit, fail loudly).
+Standalone fragments executed without a registry keep the legacy
+tolerant behaviour.
 """
 from __future__ import annotations
 
@@ -94,6 +99,40 @@ class FragmentSpec:
     # (None derives it from the cap and the observed row width).
     memory_budget: float | None = None
     morsel_rows: int | None = None
+    # Execution attempt of this fragment (0 = first run). Shuffle writes
+    # are keyed by it; recovery re-runs bump it so a retried attempt's
+    # objects never collide with a crashed attempt's partial prefix.
+    attempt: int = 0
+
+
+class WorkerKilled(RuntimeError):
+    """The worker executing a fragment died mid-flight (crash, OOM, or a
+    terminal store/invocation error). Carries the identity the recovery
+    ladder needs to re-run exactly the dead attempt."""
+
+    def __init__(self, pipeline: str, fragment: int, attempt: int,
+                 kind: str = "crash", detail: str = ""):
+        super().__init__(
+            f"worker killed ({kind}): pipeline {pipeline!r} fragment "
+            f"{fragment} attempt {attempt}" + (f" — {detail}" if detail
+                                               else ""))
+        self.pipeline = pipeline
+        self.fragment = fragment
+        self.attempt = attempt
+        self.kind = kind
+
+
+class WorkerOOMKilled(WorkerKilled):
+    """OOM kill: the fragment's working set crossed the platform memory
+    cap. ``threshold_bytes`` is the cap — recovery re-runs the attempt
+    with ``memory_budget=threshold_bytes`` so the retry takes the
+    spill-aware out-of-core path instead of re-OOMing."""
+
+    def __init__(self, pipeline: str, fragment: int, attempt: int,
+                 threshold_bytes: int):
+        super().__init__(pipeline, fragment, attempt, kind="oom",
+                         detail=f"working set over {threshold_bytes} B")
+        self.threshold_bytes = threshold_bytes
 
 
 @dataclasses.dataclass
@@ -116,34 +155,103 @@ class FragmentMetrics:
 
 
 class ShuffleRegistry:
-    """Per-query record of which shuffle partitions each writer fragment
-    produced. Writers record their bitmap after the shuffle write; readers
-    use it to tell a skipped-empty partition apart from a lost write."""
+    """Per-query record of committed shuffle attempts and their partition
+    bitmaps.
+
+    Attempt-scoped commit protocol: a writer's shuffle objects carry its
+    attempt number, and nothing is visible to readers until the writer's
+    explicit end-of-write ``commit``. The FIRST attempt to commit wins a
+    writer's slot; a slower duplicate or a superseded retry that commits
+    later is quarantined (counted, its objects ignored). A killed attempt
+    never commits, so its partial partition prefix is unreachable garbage
+    — that is the whole safety argument for crash recovery.
+    """
 
     def __init__(self):
-        self._bitmaps: dict[tuple[str, str, int], int] = {}
+        self._attempts: dict[tuple[str, str, int, int], int] = {}
+        self._committed: dict[tuple[str, str, int], int] = {}
+        self.quarantined = 0
+
+    def commit(self, query_id: str, pipeline: str, writer: int,
+               attempt: int, bitmap: int) -> bool:
+        """Publish one attempt's written-partition bitmap. Returns True
+        iff this attempt owns (or already owned — idempotent re-commit)
+        the writer's slot; False when another attempt committed first."""
+        self._attempts[(query_id, pipeline, writer, attempt)] = bitmap
+        ident = (query_id, pipeline, writer)
+        current = self._committed.get(ident)
+        if current is None or current == attempt:
+            self._committed[ident] = attempt
+            return True
+        self.quarantined += 1
+        return False
 
     def record(self, query_id: str, pipeline: str, writer: int,
                bitmap: int) -> None:
-        self._bitmaps[(query_id, pipeline, writer)] = bitmap
+        """Legacy single-attempt API: commit attempt 0."""
+        self.commit(query_id, pipeline, writer, 0, bitmap)
+
+    def committed_attempt(self, query_id: str, pipeline: str,
+                          writer: int) -> Optional[int]:
+        return self._committed.get((query_id, pipeline, writer))
 
     def bitmap(self, query_id: str, pipeline: str, writer: int
                ) -> Optional[int]:
-        return self._bitmaps.get((query_id, pipeline, writer))
+        """The committed attempt's bitmap (None when nothing committed)."""
+        attempt = self._committed.get((query_id, pipeline, writer))
+        if attempt is None:
+            return None
+        return self._attempts[(query_id, pipeline, writer, attempt)]
 
     def validate_missing(self, key: str) -> None:
-        """Raise if ``key`` names a shuffle object its writer reported
-        written; silently accept unknown keys / unrecorded writers."""
+        """Raise if ``key`` names a shuffle object its writer's committed
+        attempt reported written; silently accept keys in other
+        namespaces."""
         parsed = parse_shuffle_key(key)
         if parsed is None:
             return
-        query_id, pipeline, writer, part = parsed
-        bm = self.bitmap(query_id, pipeline, writer)
-        if bm is not None and (bm >> part) & 1:
+        query_id, pipeline, writer, part, attempt = parsed
+        committed = self.committed_attempt(query_id, pipeline, writer)
+        if committed is None or committed != attempt:
+            raise RuntimeError(
+                f"shuffle object {key!r} belongs to an uncommitted "
+                f"attempt (committed: {committed}) — a reader must never "
+                "touch a partial write")
+        bm = self._attempts[(query_id, pipeline, writer, committed)]
+        if (bm >> part) & 1:
             raise RuntimeError(
                 f"shuffle object {key!r} was reported written by fragment "
                 f"{writer} of pipeline {pipeline!r} but is missing from "
                 "storage: lost or mis-keyed write")
+
+
+def resolve_committed(key: str,
+                      registry: Optional[ShuffleRegistry]) -> str:
+    """Map a shuffle key onto the writer's committed attempt.
+
+    Consumers' read keys are compiled with attempt 0; when recovery
+    published a later attempt, the committed attempt's objects are the
+    only real ones. A writer with NO committed attempt is a protocol
+    violation (reading ahead of — or across — a crash) and fails loudly:
+    whatever objects exist under that writer are a partial, uncommitted
+    prefix. Non-shuffle keys and registry-less (standalone) execution
+    pass through untouched."""
+    if registry is None:
+        return key
+    parsed = parse_shuffle_key(key)
+    if parsed is None:
+        return key
+    query_id, pipeline, writer, part, attempt = parsed
+    committed = registry.committed_attempt(query_id, pipeline, writer)
+    if committed is None:
+        raise RuntimeError(
+            f"shuffle read of {key!r}: writer {writer} of pipeline "
+            f"{pipeline!r} has no committed attempt — refusing to read a "
+            "possibly partial uncommitted write")
+    if committed == attempt:
+        return key
+    return shuffle_key(query_id, pipeline, writer, part,
+                       attempt=committed)
 
 
 def _resolve_broadcasts(store: ObjectStore, ops: list[dict],
@@ -171,6 +279,7 @@ def _read_side(store: ObjectStore, keys: list[str], columns,
                registry: Optional[ShuffleRegistry] = None) -> ColumnBatch:
     batches = []
     for key in keys:
+        key = resolve_committed(key, registry)
         try:
             data = store.retrying_get(key)
         except KeyError:
@@ -282,8 +391,8 @@ def _validate_partitioning(batch: ColumnBatch, part: Optional[dict],
 
 def execute_fragment(store: ObjectStore, spec: FragmentSpec,
                      registry: Optional[ShuffleRegistry] = None,
-                     kv_store: Optional[ObjectStore] = None
-                     ) -> FragmentMetrics:
+                     kv_store: Optional[ObjectStore] = None,
+                     chaos=None) -> FragmentMetrics:
     """Execute one fragment. ``store`` is the object tier (base tables,
     collect results and object-tier shuffles); ``kv_store`` is the
     memory-grade exchange tier for shuffle sides/outputs whose spec says
@@ -293,21 +402,37 @@ def execute_fragment(store: ObjectStore, spec: FragmentSpec,
 
     With ``spec.memory_budget`` set the fragment runs out-of-core (see
     ``_execute_out_of_core``): same bytes written, same bits, bounded
-    memory."""
+    memory.
+
+    ``chaos`` (a ``core.chaos.ChaosPolicy``) injects process-level
+    faults: ``WorkerKilled`` after a deterministic prefix of the shuffle
+    write, and ``WorkerOOMKilled`` when the unbudgeted working set
+    crosses a chaos-chosen threshold."""
     def tier_store(tier: str) -> ObjectStore:
         return kv_store if tier == "kv" and kv_store is not None else store
+
+    kill_after = None
+    if chaos is not None:
+        out = spec.output
+        partitions = (int(out.get("partitions", 1))
+                      if out.get("type") == "shuffle" else 1)
+        kill_after = chaos.kill_after(spec.pipeline, spec.fragment,
+                                      spec.attempt, partitions)
 
     metrics = FragmentMetrics()
     if spec.memory_budget is not None:
         return _execute_out_of_core(store, spec, metrics, registry,
-                                    tier_store)
-    return _execute_in_memory(store, spec, metrics, registry, tier_store)
+                                    tier_store, kill_after=kill_after)
+    return _execute_in_memory(store, spec, metrics, registry, tier_store,
+                              chaos=chaos, kill_after=kill_after)
 
 
 def _execute_in_memory(store: ObjectStore, spec: FragmentSpec,
                        metrics: FragmentMetrics,
                        registry: Optional[ShuffleRegistry],
-                       tier_store) -> FragmentMetrics:
+                       tier_store, chaos=None,
+                       kill_after: Optional[int] = None
+                       ) -> FragmentMetrics:
     """Legacy whole-fragment materialization (no memory budget)."""
     batch = _read_side(tier_store(spec.read_tier), spec.read_keys,
                        spec.columns, metrics,
@@ -315,6 +440,15 @@ def _execute_in_memory(store: ObjectStore, spec: FragmentSpec,
     _validate_partitioning(batch, spec.partitioning, spec)
     ops = _normalize_ops(store, spec, metrics, registry,
                          build_store=tier_store(spec.read_tier2))
+    if chaos is not None:
+        # OOM kill: inputs are read (the working set exists), nothing is
+        # written yet. The recovery layer re-runs this attempt with
+        # ``memory_budget=threshold_bytes`` so the retry spills.
+        threshold = chaos.oom_threshold(spec.pipeline, spec.fragment,
+                                        spec.attempt, metrics.read_bytes)
+        if threshold is not None:
+            raise WorkerOOMKilled(spec.pipeline, spec.fragment,
+                                  spec.attempt, threshold)
 
     out = spec.output
     if out["type"] == "shuffle":
@@ -322,8 +456,13 @@ def _execute_in_memory(store: ObjectStore, spec: FragmentSpec,
             batch, ops, out["partition_by"], out["partitions"],
             backend=spec.backend)
         _write_shuffle(enumerate(parts), spec, metrics,
-                       tier_store(out.get("tier", "object")), registry)
+                       tier_store(out.get("tier", "object")), registry,
+                       kill_after=kill_after)
     else:
+        if kill_after is not None:
+            # Crash before the collect result lands; the retry rewrites
+            # the (idempotent, byte-identical) result object.
+            raise WorkerKilled(spec.pipeline, spec.fragment, spec.attempt)
         # Collect fragments route through the collapsed-agg-aware driver:
         # an elided (fragment-local, full) trailing hash_agg fuses with
         # its preceding segment exactly like a shuffle fragment's would.
@@ -335,26 +474,42 @@ def _execute_in_memory(store: ObjectStore, spec: FragmentSpec,
 
 def _write_shuffle(parts, spec: FragmentSpec, metrics: FragmentMetrics,
                    wstore: ObjectStore,
-                   registry: Optional[ShuffleRegistry]) -> None:
-    """Write ``(partition, batch)`` pairs as shuffle objects, recording
-    the written-partition bitmap. Consumes lazily, so a chunked-emission
-    producer (``radix_partition_iter``, a spill accumulator) holds only
-    one partition's copy at a time."""
+                   registry: Optional[ShuffleRegistry],
+                   kill_after: Optional[int] = None) -> None:
+    """Write ``(partition, batch)`` pairs as attempt-scoped shuffle
+    objects, then COMMIT the written-partition bitmap — the commit is the
+    publication point; nothing written before it is visible to readers.
+    Consumes lazily, so a chunked-emission producer
+    (``radix_partition_iter``, a spill accumulator) holds only one
+    partition's copy at a time. ``kill_after`` kills the worker after
+    that many objects land (a deterministic partial prefix, never
+    committed)."""
     bitmap = 0
+    written = 0
     for part, sel in parts:
+        if kill_after is not None and written >= kill_after:
+            raise WorkerKilled(spec.pipeline, spec.fragment, spec.attempt,
+                               detail=f"{written} partitions written")
         metrics.rows_out += sel.num_rows
         if sel.num_rows == 0:
             continue   # readers tolerate the missing object
         bitmap |= 1 << part
         data = columnar.serialize_frame(sel)
         wstore.put(shuffle_key(spec.query_id, spec.pipeline,
-                               spec.fragment, part), data)
+                               spec.fragment, part,
+                               attempt=spec.attempt), data)
+        written += 1
         metrics.write_requests += 1
         metrics.write_bytes += len(data)
+    if kill_after is not None:
+        # The chaos-chosen prefix exceeded the non-empty partition count:
+        # the worker still dies before its commit.
+        raise WorkerKilled(spec.pipeline, spec.fragment, spec.attempt,
+                           detail=f"{written} partitions written")
     metrics.partitions_written = bitmap
     if registry is not None:
-        registry.record(spec.query_id, spec.pipeline, spec.fragment,
-                        bitmap)
+        registry.commit(spec.query_id, spec.pipeline, spec.fragment,
+                        spec.attempt, bitmap)
 
 
 def _write_collect(batch: ColumnBatch, spec: FragmentSpec,
@@ -391,6 +546,7 @@ def _iter_morsels(store: ObjectStore, spec: FragmentSpec,
     ``_read_side``'s missing-object handling and partitioning
     validation, morsel by morsel."""
     for key in spec.read_keys:
+        key = resolve_committed(key, registry)
         try:
             data = store.retrying_get(key)
         except KeyError:
@@ -414,7 +570,9 @@ def _iter_morsels(store: ObjectStore, spec: FragmentSpec,
 def _execute_out_of_core(store: ObjectStore, spec: FragmentSpec,
                          metrics: FragmentMetrics,
                          registry: Optional[ShuffleRegistry],
-                         tier_store) -> FragmentMetrics:
+                         tier_store,
+                         kill_after: Optional[int] = None
+                         ) -> FragmentMetrics:
     """Budgeted fragment execution: bounded morsels + spill, bit-identical
     output bytes vs ``_execute_in_memory`` on the same backend.
 
@@ -482,7 +640,8 @@ def _execute_out_of_core(store: ObjectStore, spec: FragmentSpec,
                     yield p, sel
                     grant.release_all()
 
-            _write_shuffle(emit(), spec, metrics, wstore, registry)
+            _write_shuffle(emit(), spec, metrics, wstore, registry,
+                           kill_after=kill_after)
         else:
             # Mid-chain barrier: stream what is provably exact, then run
             # the unchanged driver over the accumulated remainder.
@@ -496,7 +655,7 @@ def _execute_out_of_core(store: ObjectStore, spec: FragmentSpec,
             parts = engine_compile.run_pipeline_partition(
                 full, ops[k:], key_col, r, backend=backend)
             _write_shuffle(enumerate(parts), spec, metrics, wstore,
-                           registry)
+                           registry, kill_after=kill_after)
     else:
         k = engine_compile.streamable_prefix(ops) \
             if backend == "numpy" else 0
@@ -505,6 +664,8 @@ def _execute_out_of_core(store: ObjectStore, spec: FragmentSpec,
             acc.add(m if k == 0 else
                     engine_compile.run_pipeline(m, ops[:k],
                                                 backend=backend))
+        if kill_after is not None:
+            raise WorkerKilled(spec.pipeline, spec.fragment, spec.attempt)
         full = acc.finalize()
         batch = engine_compile.run_pipeline_collect(full, ops[k:],
                                                     backend=backend)
@@ -520,20 +681,28 @@ def _execute_out_of_core(store: ObjectStore, spec: FragmentSpec,
     return metrics
 
 
-def shuffle_key(query_id: str, pipeline: str, writer: int, part: int) -> str:
-    return f"shuffle/{query_id}/{pipeline}/w{writer:04d}/r{part:04d}"
+def shuffle_key(query_id: str, pipeline: str, writer: int, part: int,
+                attempt: int = 0) -> str:
+    """Attempt-scoped shuffle object key. The attempt component is LAST so
+    every ``shuffle/{query}/{pipeline}/`` prefix listing stays valid."""
+    return (f"shuffle/{query_id}/{pipeline}/w{writer:04d}/r{part:04d}"
+            f"/a{attempt:02d}")
 
 
-def parse_shuffle_key(key: str) -> Optional[tuple[str, str, int, int]]:
-    """Inverse of ``shuffle_key``; None for keys in other namespaces."""
+def parse_shuffle_key(key: str
+                      ) -> Optional[tuple[str, str, int, int, int]]:
+    """Inverse of ``shuffle_key`` — ``(query, pipeline, writer, part,
+    attempt)``; None for keys in other namespaces."""
     parts = key.split("/")
-    if len(parts) != 5 or parts[0] != "shuffle":
+    if len(parts) != 6 or parts[0] != "shuffle":
         return None
-    writer, part = parts[3], parts[4]
-    if not (writer.startswith("w") and part.startswith("r")):
+    writer, part, attempt = parts[3], parts[4], parts[5]
+    if not (writer.startswith("w") and part.startswith("r")
+            and attempt.startswith("a")):
         return None
     try:
-        return parts[1], parts[2], int(writer[1:]), int(part[1:])
+        return (parts[1], parts[2], int(writer[1:]), int(part[1:]),
+                int(attempt[1:]))
     except ValueError:
         return None
 

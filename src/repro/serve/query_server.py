@@ -37,6 +37,7 @@ from repro.core.storage_service import ObjectStore
 from repro.core.token_bucket import AdmissionBucket, AdmissionConfig
 from repro.engine import compile as engine_compile
 from repro.engine import optimizer, plans, worker
+from repro.engine.columnar import ColumnBatch
 from repro.engine.coordinator import Coordinator, QueryResult
 from repro.engine.logical import LogicalQuery
 
@@ -83,6 +84,9 @@ class ServeReport:
     replans: int = 0
     speculative_launched: int = 0
     speculative_won: int = 0
+    # Queries whose recovery ladder was exhausted: served with a
+    # structured ``QueryResult.failure`` record and an empty result.
+    failures: int = 0
 
     @property
     def plan_cache_hit_rate(self) -> float:
@@ -124,8 +128,11 @@ class ResultCache:
             table_etags: dict[str, int],
             registry: worker.ShuffleRegistry,
             shuffle_tiers: Optional[dict[str, str]] = None) -> None:
-        bitmaps = {bkey: registry.bitmap(*bkey)
-                   for bkey in list(registry._bitmaps)}
+        # Remember each writer's COMMITTED attempt alongside its bitmap:
+        # recovery may have published attempt > 0, and validation must
+        # probe the attempt-scoped keys that attempt actually wrote.
+        bitmaps = {ident: (att, registry.bitmap(*ident))
+                   for ident, att in registry._committed.items()}
         self._entries.pop(key, None)
         self._entries[key] = {
             "query_id": query_id, "terminal": terminal, "n_frags": n_frags,
@@ -155,12 +162,12 @@ class ResultCache:
                 self.store.etag(rk)
             except KeyError:
                 return False
-        for (_, pipeline, writer), bm in entry["bitmaps"].items():
+        for (_, pipeline, writer), (att, bm) in entry["bitmaps"].items():
             st = self._shuffle_store(entry, pipeline)
             p = 0
             while bm >> p:
                 if (bm >> p) & 1:
-                    sk = worker.shuffle_key(qid, pipeline, writer, p)
+                    sk = worker.shuffle_key(qid, pipeline, writer, p, att)
                     try:
                         st.etag(sk)
                     except KeyError:
@@ -221,16 +228,19 @@ class QueryServer:
                  backend: str = "jit", mode: str = "elastic",
                  admission: Optional[AdmissionConfig] = None,
                  result_cache: bool = True, max_workers: int = 1024,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, chaos=None,
+                 speculation_headroom: int = 0, stage_retries: int = 2):
         self.store = store
         self.worker_budget = worker_budget
         self.coordinator = Coordinator(store, mode=mode, backend=backend,
                                        max_workers=min(max_workers,
                                                        worker_budget),
-                                       rng_seed=rng_seed)
+                                       rng_seed=rng_seed, chaos=chaos)
         self.scheduler = MultiQueryScheduler(
             self.coordinator.pool, StragglerPolicy(), budget=worker_budget,
-            rng_seed=rng_seed)
+            rng_seed=rng_seed, chaos=chaos,
+            speculation_headroom=speculation_headroom,
+            stage_retries=stage_retries)
         self.admission = admission or AdmissionConfig(
             capacity=max(256.0, 4.0 * worker_budget),
             refill_per_s=2.0 * worker_budget)
@@ -336,6 +346,29 @@ class QueryServer:
                     finish_t=req.submit_t, plan_cache_hit=ctx["plan_hit"],
                     result_cache_hit=True))
                 continue
+            if job.failure is not None:
+                # Recovery ladder exhausted inside the scheduler: surface
+                # a clean per-query failure record instead of raising, so
+                # the rest of the batch is unaffected. No result objects
+                # exist to merge and nothing is cached.
+                qres = QueryResult(
+                    name=plan.name, result=ColumnBatch({}),
+                    runtime_s=(job.finish_t or job.submit_t) - job.submit_t,
+                    cumulated_worker_s=sum(
+                        r.node_seconds for r in job.results.values()),
+                    faas_cost_usd=0.0, storage_cost_usd=0.0,
+                    stage_metrics={},
+                    request_stats=dataclasses.replace(self.store.stats),
+                    peak_workers=0, stage_node_seconds=[],
+                    plan_shape_hash=ctx["shape_hash"],
+                    plan_cache_hit=ctx["plan_hit"],
+                    failure=dict(job.failure))
+                served.append(ServedQuery(
+                    request=req, result=qres, query_id=qid,
+                    submit_t=job.submit_t, admit_t=job.admit_t,
+                    finish_t=job.finish_t, plan_cache_hit=ctx["plan_hit"],
+                    result_cache_hit=False))
+                continue
             qres = coord.finalize(plan, qid, ctx["frag_counts"],
                                   job.results, ctx["stats_before"],
                                   ctx["shape_hash"], ctx["plan_hit"],
@@ -371,6 +404,7 @@ class QueryServer:
             speculative_launched=sum(
                 s.result.speculative_launched for s in served),
             speculative_won=sum(s.result.speculative_won for s in served),
+            failures=sum(1 for s in served if s.result.failure is not None),
             admission={
                 tenant: {"admitted": b.admitted, "denied": b.denied}
                 for tenant, b in admitter.buckets.items()})

@@ -746,7 +746,9 @@ def test_legacy_fragmentspec_join_still_supported():
 
 def test_parse_shuffle_key_roundtrip():
     key = shuffle_key("q12", "scan_lineitem", 3, 17)
-    assert parse_shuffle_key(key) == ("q12", "scan_lineitem", 3, 17)
+    assert parse_shuffle_key(key) == ("q12", "scan_lineitem", 3, 17, 0)
+    key5 = shuffle_key("q12", "scan_lineitem", 3, 17, 5)
+    assert parse_shuffle_key(key5) == ("q12", "scan_lineitem", 3, 17, 5)
     assert parse_shuffle_key("result/q/p/frag-0000") is None
     assert parse_shuffle_key("shuffle/q/p/bogus") is None
 

@@ -1,0 +1,735 @@
+"""Worker-failure fault domain (ROADMAP item 3 remainder).
+
+Crash/OOM/invoke-fail chaos with attempt-scoped shuffle commits, lineage
+recovery, and store circuit breakers:
+
+* the differential crash-parity harness — representative query shapes run
+  fault-free and under seeded kill/OOM/invoke-fail chaos on both
+  backends; the collected results must be BIT-identical, and a registry
+  spy proves no consumer ever read a shuffle object outside its writer's
+  committed attempt (the partial-write safety guarantee);
+* the attempt-commit protocol itself (first committer wins, quarantine,
+  ``resolve_committed`` refusing uncommitted reads);
+* the recovery escalation ladder: in-place attempt retry -> stage re-run
+  -> structured ``QueryResult.failure`` at the serving layer;
+* circuit breakers over storage tiers and mid-query kv -> object
+  demotion under brownout;
+* pool-level fault machinery: invoke retries with capped backoff,
+  provisioned/elastic release parity, cold-start jitter determinism,
+  FaaS limit boundaries, and speculation headroom/denial accounting.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.chaos import ChaosPolicy
+from repro.core.elastic_pool import (ColdStartModel, ElasticPool,
+                                     FaasLimits, InvokeFailedError,
+                                     ProvisionedPool)
+from repro.core.scheduler import (Fragment, MultiQueryScheduler, QueryJob,
+                                  Stage, StragglerPolicy)
+from repro.core.storage_service import (CircuitBreaker, CircuitOpenError,
+                                        KVStore, ObjectStore,
+                                        UnavailableError)
+from repro.engine import columnar, datagen, explain, optimizer, queries
+from repro.engine import worker as worker_mod
+from repro.engine.adaptive import (ADAPTIVE, STATIC, AdaptiveCoordinator,
+                                   AdaptivePolicy)
+from repro.engine.columnar import ColumnBatch
+from repro.engine.coordinator import QueryFailedError
+from repro.engine.logical import col, scan, sum_
+from repro.engine.plans import ShuffleOutput
+from repro.engine.worker import (FragmentSpec, ShuffleRegistry,
+                                 WorkerKilled, WorkerOOMKilled,
+                                 execute_fragment, parse_shuffle_key,
+                                 resolve_committed, shuffle_key)
+from repro.serve.query_server import QueryRequest, QueryServer
+
+YEAR = datagen.DATE_1994_01_01
+
+# Tables sized so a scan fragment's working set clears the chaos OOM
+# floor (64 KiB) — otherwise oom_prob could never fire.
+LI_ROWS, LI_PARTS = 16000, 4
+OD_ROWS, OD_PARTS = 3200, 4
+
+
+def _join_q(n=8, name="fault_q"):
+    return (
+        scan("lineitem", ["l_orderkey", "l_extendedprice", "l_discount"])
+        .join(scan("orders", ["o_orderkey", "o_totalprice"]),
+              on=("l_orderkey", "o_orderkey"))
+        .select("l_orderkey",
+                (col("l_extendedprice") * (1 - col("l_discount")))
+                .alias("revenue"), "o_totalprice")
+        .group_by("l_orderkey")
+        .agg(sum_("revenue").alias("revenue"))
+        .collect(name, shuffle_partitions=n))
+
+
+def _canon(batch):
+    # Primary sort key = first column alphabetically (the integer group
+    # key in every shape here): a float-primary order would let
+    # association noise swap near-equal rows across different plans.
+    cols = sorted(batch.keys())
+    order = np.lexsort([np.asarray(batch[c]) for c in reversed(cols)])
+    return {c: np.asarray(batch[c])[order] for c in cols}
+
+
+def _assert_bit_identical(a, b):
+    ca, cb = _canon(a), _canon(b)
+    assert list(ca) == list(cb)
+    for c in ca:
+        np.testing.assert_array_equal(ca[c], cb[c])
+
+
+def _assert_close(a, b):
+    # Cross-plan comparison: different fan-outs legally reorder float
+    # additions inside aggregates.
+    ca, cb = _canon(a), _canon(b)
+    assert list(ca) == list(cb)
+    for c in ca:
+        np.testing.assert_allclose(ca[c], cb[c], rtol=1e-6, atol=1e-8)
+
+
+@pytest.fixture(scope="module")
+def fault_store():
+    store = ObjectStore()
+    li = datagen.load_table(store, "lineitem", LI_ROWS, LI_PARTS)
+    od = datagen.load_table(store, "orders", OD_ROWS, OD_PARTS)
+    return store, {"lineitem": li, "orders": od}
+
+
+class _GetSpy(ObjectStore):
+    """Records every GET key so the harness can prove no read ever
+    targeted a shuffle object outside its writer's committed attempt."""
+
+    def __init__(self):
+        super().__init__()
+        self.got = []
+
+    def get(self, key):
+        self.got.append(key)
+        return super().get(key)
+
+
+def _coord(store, tables, policy, chaos=None, backend="jit",
+           mode="elastic", seed=0, got=None, **kw):
+    coord = AdaptiveCoordinator(store, policy=policy, mode=mode,
+                                backend=backend, rng_seed=seed,
+                                chaos=chaos, **kw)
+    store.chaos = chaos
+    coord.kv_store.chaos = chaos
+    if got is not None:
+        # Small exchanges ride the kv tier: spy its GETs too.
+        orig_get = coord.kv_store.get
+
+        def spied_get(key, *a, **k):
+            got.append(key)
+            return orig_get(key, *a, **k)
+
+        coord.kv_store.get = spied_get
+    for name, keys in tables.items():
+        coord.register_table(name, keys)
+    return coord
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos: determinism and first-offer-only semantics
+# ---------------------------------------------------------------------------
+
+def test_kill_after_deterministic_and_first_offer_only():
+    a = ChaosPolicy(seed=11, kill_prob=1.0)
+    b = ChaosPolicy(seed=11, kill_prob=1.0)
+    pa = a.kill_after("scan", 3, 0, 8)
+    assert pa is not None and 0 <= pa < 8
+    assert pa == b.kill_after("scan", 3, 0, 8)   # pure f(seed, identity)
+    # Any re-execution of the same (stage, fragment) survives: the offer
+    # is consumed, which is what guarantees recovery terminates.
+    assert a.kill_after("scan", 3, 1, 8) is None
+    assert a.kill_after("scan", 3, 0, 8) is None
+    assert a.kills == 1
+
+
+def test_oom_threshold_deterministic_and_floor():
+    a = ChaosPolicy(seed=5, oom_prob=1.0)
+    b = ChaosPolicy(seed=5, oom_prob=1.0)
+    working = 10 * 1024 * 1024
+    ta = a.oom_threshold("scan", 0, 0, working)
+    assert ta is not None and 64 * 1024 <= ta < working
+    assert ta == b.oom_threshold("scan", 0, 0, working)
+    assert a.oom_threshold("scan", 0, 1, working) is None  # first offer only
+    # A tiny working set fits under the floor: no kill, offer consumed.
+    c = ChaosPolicy(seed=5, oom_prob=1.0)
+    assert c.oom_threshold("scan", 1, 0, 1024) is None
+
+
+def test_invoke_fail_independent_per_attempt():
+    chaos = ChaosPolicy(seed=0, invoke_fail_prob=1.0)
+    assert chaos.invoke_fail(0, 0) and chaos.invoke_fail(0, 1)
+    none = ChaosPolicy(seed=0, invoke_fail_prob=0.0)
+    assert not none.invoke_fail(0, 0)
+    # Deterministic per (seq, attempt) at intermediate probabilities.
+    x = ChaosPolicy(seed=9, invoke_fail_prob=0.5)
+    y = ChaosPolicy(seed=9, invoke_fail_prob=0.5)
+    assert [x.invoke_fail(s, a) for s in range(8) for a in range(3)] == \
+        [y.invoke_fail(s, a) for s in range(8) for a in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# Attempt-scoped commit protocol
+# ---------------------------------------------------------------------------
+
+def test_registry_first_committer_wins_and_quarantines():
+    reg = ShuffleRegistry()
+    assert reg.commit("q", "p", 0, 1, 0b101)          # attempt 1 publishes
+    assert reg.commit("q", "p", 0, 1, 0b101)          # idempotent re-commit
+    assert not reg.commit("q", "p", 0, 0, 0b111)      # late loser quarantined
+    assert reg.quarantined == 1
+    assert reg.committed_attempt("q", "p", 0) == 1
+    assert reg.bitmap("q", "p", 0) == 0b101
+
+
+def test_resolve_committed_rewrites_or_refuses():
+    reg = ShuffleRegistry()
+    key0 = shuffle_key("q", "p", 0, 3)                # compile-time attempt 0
+    with pytest.raises(RuntimeError, match="no committed attempt"):
+        resolve_committed(key0, reg)                  # nothing published yet
+    reg.commit("q", "p", 0, 2, 0b1000)
+    assert resolve_committed(key0, reg) == shuffle_key("q", "p", 0, 3, 2)
+    # Non-shuffle keys and registry-less execution pass through.
+    assert resolve_committed("tables/x", reg) == "tables/x"
+    assert resolve_committed(key0, None) == key0
+
+
+def _producer_consumer_specs(rows=80):
+    # Incompressible payload: the chaos OOM threshold is judged against
+    # SERIALIZED working-set bytes, and arange data would compress to
+    # nothing.
+    rng = np.random.default_rng(7)
+    batch = ColumnBatch({"key": rng.integers(0, 1 << 31, rows,
+                                             dtype=np.int64),
+                         "val": rng.random(rows)})
+    producer = FragmentSpec(
+        query_id="q", pipeline="p", fragment=0, read_keys=["table/t0"],
+        read_keys2=[], columns=None, ops=[], join=None,
+        output={"type": "shuffle", "partition_by": "key", "partitions": 8})
+    consumer = FragmentSpec(
+        query_id="q", pipeline="c", fragment=0,
+        read_keys=[shuffle_key("q", "p", 0, part) for part in range(8)],
+        read_keys2=[], columns=None, ops=[], join=None,
+        output={"type": "collect"}, missing_ok=True)
+    return batch, producer, consumer
+
+
+def test_killed_attempt_quarantined_recovery_republishes():
+    """A crashed writer leaves a partial partition prefix; the registry
+    never publishes it, a reader refuses to touch it, and the recovery
+    attempt's commit is what readers resolve — while a late duplicate of
+    the dead attempt is quarantined."""
+    # Pick a seed whose kill lands mid-write (a partial, non-empty prefix).
+    seed = next(s for s in range(100)
+                if 2 <= (ChaosPolicy(seed=s, kill_prob=1.0)
+                         .kill_after("p", 0, 0, 8) or 0) <= 6)
+    chaos = ChaosPolicy(seed=seed, kill_prob=1.0)
+    store, reg = ObjectStore(), ShuffleRegistry()
+    batch, producer, consumer = _producer_consumer_specs()
+    store.put("table/t0", columnar.serialize(batch))
+    with pytest.raises(WorkerKilled):
+        execute_fragment(store, producer, registry=reg, chaos=chaos)
+    prefix = store.list("shuffle/q/p/")
+    assert 0 < len(prefix) < 8, "kill must leave a PARTIAL prefix"
+    assert reg.committed_attempt("q", "p", 0) is None
+    # Partial-write safety: a consumer cannot read past the crash.
+    with pytest.raises(RuntimeError, match="no committed attempt"):
+        execute_fragment(store, consumer, registry=reg)
+    # Recovery: the SAME chaos re-offers nothing; attempt 1 commits.
+    retry = dataclasses.replace(producer, attempt=1)
+    execute_fragment(store, retry, registry=reg, chaos=chaos)
+    assert reg.committed_attempt("q", "p", 0) == 1
+    cm = execute_fragment(store, consumer, registry=reg)
+    assert cm.rows_in == batch.num_rows     # resolved to the a01 objects
+    # A slow duplicate of the DEAD attempt completes late: quarantined.
+    execute_fragment(store, producer, registry=reg, chaos=chaos)
+    assert reg.quarantined == 1
+    assert reg.committed_attempt("q", "p", 0) == 1
+
+
+def test_oom_killed_attempt_retries_on_spill_path():
+    chaos = ChaosPolicy(seed=1, oom_prob=1.0)
+    store, reg = ObjectStore(), ShuffleRegistry()
+    batch, producer, consumer = _producer_consumer_specs(rows=20000)
+    store.put("table/t0", columnar.serialize(batch))
+    with pytest.raises(WorkerOOMKilled) as exc_info:
+        execute_fragment(store, producer, registry=reg, chaos=chaos)
+    threshold = exc_info.value.threshold_bytes
+    assert threshold >= 64 * 1024
+    # The recovery contract: re-run the dead attempt with the chaos
+    # threshold as its memory budget, so the retry spills instead of
+    # re-OOMing — and writes the identical bytes.
+    retry = dataclasses.replace(producer, attempt=1,
+                                memory_budget=float(threshold))
+    execute_fragment(store, retry, registry=reg, chaos=chaos)
+    assert reg.committed_attempt("q", "p", 0) == 1
+    cm = execute_fragment(store, consumer, registry=reg)
+    assert cm.rows_in == batch.num_rows
+    out = columnar.deserialize(
+        store.get(worker_mod.result_key("q", "c", 0)))
+    _assert_bit_identical(out, batch)
+
+
+# ---------------------------------------------------------------------------
+# Differential crash-parity harness (acceptance)
+# ---------------------------------------------------------------------------
+
+CHAOS_LEGS = {
+    "kill": dict(kill_prob=1.0),
+    "oom": dict(oom_prob=1.0),
+    "invoke": dict(invoke_fail_prob=0.25),
+    "mixed": dict(kill_prob=0.5, oom_prob=0.4, invoke_fail_prob=0.1),
+}
+
+
+def _leg_chaos(seed, kind):
+    return ChaosPolicy(seed=seed, slow_prob=0.0, drop_prob=0.0,
+                       **CHAOS_LEGS[kind])
+
+
+def _run_shape(store, tables, shape, policy, chaos, backend, seed=0,
+               got=None):
+    """One coordinator run of a named query shape; returns QueryResult."""
+    if shape == "ooc":
+        coord = _coord(store, tables, policy, chaos=chaos, backend=backend,
+                       seed=seed, got=got, memory_budget=512 * 1024.0)
+        return coord.run(_join_q(), query_id=f"ooc-{backend}-{seed}")
+    coord = _coord(store, tables, policy, chaos=chaos, backend=backend,
+                   seed=seed, got=got)
+    if shape == "q12":
+        return coord.run(queries.q12_logical(year_lo=YEAR),
+                         query_id=f"q12-{backend}-{seed}")
+    if shape == "join":
+        return coord.run(_join_q(), query_id=f"join-{backend}-{seed}")
+    if shape == "kv":
+        stats = optimizer.Stats.from_store(store, coord.table_keys)
+        plan, _ = optimizer.lower(_join_q(), stats=stats, backend=backend)
+        for pipe in plan.pipelines:
+            if isinstance(pipe.output, ShuffleOutput):
+                pipe.output.tier = "kv"
+        return coord.execute(plan, query_id=f"kv-{backend}-{seed}")
+    raise AssertionError(shape)
+
+
+# Which chaos legs exercise each shape (the OOM check lives on the
+# in-memory path, so the out-of-core shape runs kill/invoke only).
+SHAPE_LEGS = {
+    "q12": ["kill", "oom", "invoke", "mixed"],
+    "join": ["kill", "oom", "invoke", "mixed"],
+    "kv": ["kill", "oom"],
+    "ooc": ["kill", "invoke"],
+}
+# Pin placements under chaos for the kv shape so the faults hit the kv
+# tier instead of being re-placed away at the first boundary.
+SHAPE_POLICY = {
+    "kv": AdaptivePolicy(replan_fanout=False, replan_tier=False,
+                         flip_build=False, demote_elided=False),
+}
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jit"])
+@pytest.mark.parametrize("shape", ["q12", "join", "kv", "ooc"])
+def test_crash_parity_bit_identical(fault_store, monkeypatch, backend,
+                                    shape):
+    """Fault-free vs kill/OOM/invoke-fail chaos: the recovering executor
+    must produce BIT-identical collects, every chaos leg must actually
+    fire its fault, and the registry spy must show every shuffle read hit
+    a committed attempt."""
+    _, tables = fault_store
+    registries = []
+
+    class _RegistrySpy(ShuffleRegistry):
+        def __init__(self):
+            super().__init__()
+            registries.append(self)
+
+    monkeypatch.setattr(worker_mod, "ShuffleRegistry", _RegistrySpy)
+    policy = SHAPE_POLICY.get(shape, ADAPTIVE)
+
+    def load(spy):
+        return {name: datagen.load_table(
+            spy, name, LI_ROWS if name == "lineitem" else OD_ROWS,
+            LI_PARTS if name == "lineitem" else OD_PARTS)
+            for name in tables}
+
+    base_store = _GetSpy()
+    base = _run_shape(base_store, load(base_store), shape, policy,
+                      None, backend)
+    assert base.failure is None
+    for i, kind in enumerate(SHAPE_LEGS[shape]):
+        spec = CHAOS_LEGS[kind]
+
+        def fired(chaos):
+            if kind == "mixed":
+                # Each class has its own dedicated leg; the mixed leg
+                # checks interaction, any injected fault qualifies.
+                return chaos.kills + chaos.ooms + chaos.invoke_fails > 0
+            return (("kill_prob" not in spec or chaos.kills > 0)
+                    and ("oom_prob" not in spec or chaos.ooms > 0)
+                    and ("invoke_fail_prob" not in spec
+                         or chaos.invoke_fails > 0))
+
+        # Sub-1.0 probabilities can draw no fault at all for a given
+        # seed; walk seeds until every configured fault class fired at
+        # least once (each walked run still asserts parity).
+        for leg_seed in range(31 + i, 31 + i + 8):
+            chaos = _leg_chaos(leg_seed, kind)
+            spy = _GetSpy()
+            registries.clear()
+            res = _run_shape(spy, load(spy), shape, policy, chaos,
+                             backend, seed=i, got=spy.got)
+            _assert_bit_identical(base.result, res.result)
+            if fired(chaos):
+                break
+        assert fired(chaos), \
+            f"{shape}/{kind}: no seed in the walk fired every fault"
+        # Registry spy: no consumer observed an uncommitted partial
+        # write — every shuffle GET resolves to its writer's committed
+        # attempt.
+        commits = {}
+        for reg in registries:
+            commits.update(reg._committed)
+        shuffle_gets = [p for p in map(parse_shuffle_key, spy.got)
+                        if p is not None]
+        assert shuffle_gets, "harness expected shuffle reads"
+        for qid, pipe, wtr, _part, att in shuffle_gets:
+            assert commits.get((qid, pipe, wtr)) == att, \
+                f"{shape}/{kind}: read attempt {att} of " \
+                f"{qid}/{pipe}/w{wtr}, committed " \
+                f"{commits.get((qid, pipe, wtr))}"
+        if kind in ("kill", "oom", "mixed"):
+            assert any(ln.startswith("recover:")
+                       for ln in res.adaptive_trace), res.adaptive_trace
+
+
+def test_static_baseline_recovers_by_stage_rerun(fault_store):
+    """The static policy has no in-place attempt retry: a kill costs it a
+    whole stage re-run — it still converges (first-offer kills) to the
+    bit-identical result, just slower than the recovering executor."""
+    store, tables = fault_store
+    static_r = dataclasses.replace(STATIC, max_recover_attempts=16)
+    base = _run_shape(store, tables, "join", STATIC, None, "jit")
+    store.chaos = None
+    chaos_s = _leg_chaos(31, "kill")
+    res_s = _run_shape(store, tables, "join", static_r, chaos_s, "jit",
+                       seed=1)
+    store.chaos = None
+    chaos_a = _leg_chaos(31, "kill")
+    res_a = _run_shape(store, tables, "join", ADAPTIVE, chaos_a, "jit",
+                       seed=1)
+    store.chaos = None
+    _assert_bit_identical(base.result, res_s.result)
+    _assert_close(base.result, res_a.result)
+    assert chaos_s.kills > 0 and chaos_a.kills > 0
+    assert any("re-ran the stage" in ln for ln in res_s.adaptive_trace)
+    assert any("re-ran only the dead attempt" in ln
+               for ln in res_a.adaptive_trace)
+    # Identical kill schedule: lineage recovery strictly beats re-running
+    # whole stages.
+    assert res_a.runtime_s < res_s.runtime_s
+
+
+# ---------------------------------------------------------------------------
+# Escalation ladder: attempt retry -> stage re-run -> structured failure
+# ---------------------------------------------------------------------------
+
+def test_exhausted_ladder_raises_structured_query_failure(fault_store):
+    store, tables = fault_store
+    chaos = ChaosPolicy(seed=0, slow_prob=0.0, drop_prob=0.0,
+                        invoke_fail_prob=1.0)
+    coord = _coord(store, tables, ADAPTIVE, chaos=chaos, mode="elastic")
+    with pytest.raises(QueryFailedError) as exc_info:
+        coord.run(_join_q(), query_id="doomed")
+    store.chaos = None
+    failure = exc_info.value.failure
+    assert failure["kind"] == "InvokeFailedError"
+    assert failure["attempts"] == ADAPTIVE.max_recover_attempts + 1
+    assert failure["stage"]
+    assert coord.pool.stats["invoke_faults"] >= \
+        coord.pool.invoke_max_attempts
+
+
+def test_query_server_surfaces_failure_and_isolates_batch(fault_store):
+    """A query whose ladder is exhausted is served as a structured
+    ``QueryResult.failure`` with an empty result; it neither raises nor
+    poisons the rest of the batch."""
+    store, tables = fault_store
+    chaos = ChaosPolicy(seed=0, slow_prob=0.0, drop_prob=0.0,
+                        invoke_fail_prob=1.0)
+    srv = QueryServer(store, worker_budget=16, result_cache=False,
+                      chaos=chaos, stage_retries=1)
+    for name, keys in tables.items():
+        srv.register_table(name, keys)
+    report = srv.serve([QueryRequest(queries.q12_logical(year_lo=YEAR))])
+    store.chaos = None
+    assert report.failures == 1
+    (sq,) = report.queries
+    assert sq.result.failure is not None
+    assert sq.result.failure["kind"] == "InvokeFailedError"
+    assert sq.result.failure["attempts"] == 2       # stage_retries + 1
+    assert sq.result.result.num_rows == 0
+    # explain renders the failure record.
+    text = explain.format_adaptive(sq.result)
+    assert "FAILED: [InvokeFailedError]" in text
+
+
+def test_query_server_recovers_kills_in_shared_pool(fault_store):
+    store, tables = fault_store
+
+    def serve(chaos):
+        # kill_prob=1.0 + first-offer-only: a width-n stage needs up to
+        # n stage-level retries before every fragment's kill is spent.
+        srv = QueryServer(store, worker_budget=32, result_cache=False,
+                          chaos=chaos, stage_retries=8)
+        for name, keys in tables.items():
+            srv.register_table(name, keys)
+        reqs = [QueryRequest(queries.q12_logical(year_lo=YEAR + 30 * i))
+                for i in range(2)]
+        report = srv.serve(reqs)
+        store.chaos = None
+        return report
+
+    base = serve(None)
+    chaos = ChaosPolicy(seed=13, slow_prob=0.0, drop_prob=0.0,
+                        kill_prob=1.0)
+    faulted = serve(chaos)
+    assert chaos.kills > 0
+    assert faulted.failures == 0
+    for b, f in zip(base.queries, faulted.queries):
+        _assert_bit_identical(b.result.result, f.result.result)
+        # The dead attempts' elapsed time is charged, never refunded.
+        assert f.finish_t >= b.finish_t
+
+
+# ---------------------------------------------------------------------------
+# Circuit breakers and kv brownout demotion
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(failure_threshold=4, reset_timeout_s=30.0)
+    assert br.state == "closed"
+    for _ in range(3):
+        assert br.allow(0.0)
+        br.record_failure(0.0)
+    assert br.state == "closed"                  # 3 consecutive < threshold
+    br.record_failure(1.0)
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow(10.0)                    # fast-fail inside timeout
+    assert br.fast_fails == 1
+    assert br.allow(31.5)                        # probe after reset timeout
+    assert br.state == "half_open" and br.probes == 1
+    br.record_failure(31.5)                      # failed probe re-opens
+    assert br.state == "open" and br.trips == 2
+    assert br.allow(62.0)
+    br.record_success()
+    assert br.state == "closed"
+    # Success resets the consecutive counter: sparse failures never trip.
+    br.record_failure(63.0)
+    br.record_success()
+    assert br.state == "closed" and br._consecutive == 0
+
+
+def test_kv_store_breaker_trips_to_fast_fail():
+    kv = KVStore()
+    kv.chaos = ChaosPolicy(seed=0, slow_prob=0.0, drop_prob=0.0,
+                           unavailable_prob=1.0)
+    kv.put("tables/base", b"x")                  # out of scope: lands fine
+    for _ in range(kv.breaker.failure_threshold):
+        with pytest.raises(UnavailableError):
+            kv.put("shuffle/q/p/w0000/r0000/a00", b"y")
+    assert kv.breaker.state == "open"
+    # Open breaker fast-fails without touching the (dark) tier.
+    with pytest.raises(CircuitOpenError):
+        kv.get("shuffle/q/p/w0000/r0000/a00")
+    assert kv.breaker.fast_fails >= 1
+
+
+def test_retrying_get_classifies_terminal_vs_retryable():
+    store = ObjectStore()
+    # Terminal: a missing key fails fast — no backoff burned.
+    with pytest.raises(KeyError):
+        store.retrying_get("nope")
+    assert store.stats.retried == 0
+    # Terminal: an open breaker fails fast too.
+    store.breaker = CircuitBreaker(failure_threshold=1)
+    store.breaker.record_failure(0.0)
+    with pytest.raises(CircuitOpenError):
+        store.retrying_get("shuffle/x")
+    assert store.stats.retried == 0
+    # Retryable: a transient brownout is absorbed by the retry schedule.
+    plain = ObjectStore()
+    plain.put("shuffle/x", b"d")
+    plain.chaos = ChaosPolicy(seed=0, slow_prob=0.0, drop_prob=0.0,
+                              unavailable_prob=1.0, unavailable_offers=2)
+    assert plain.retrying_get("shuffle/x") == b"d"
+    assert plain.stats.retried == 2
+
+
+def test_kv_brownout_demotes_mid_query_and_completes(fault_store):
+    """A hard kv outage is a brownout, not a query failure: the breaker
+    plus recovery demote every kv exchange to the object store mid-query
+    and the result is bit-identical to the fault-free run."""
+    store, tables = fault_store
+    policy = SHAPE_POLICY["kv"]
+    base = _run_shape(store, tables, "kv", policy, None, "jit")
+    coord = _coord(store, tables, policy, backend="jit", seed=1)
+    store.chaos = None                    # fault ONLY the kv tier
+    coord.kv_store.chaos = ChaosPolicy(seed=2, slow_prob=0.0,
+                                       drop_prob=0.0, unavailable_prob=1.0)
+    stats = optimizer.Stats.from_store(store, coord.table_keys)
+    plan, _ = optimizer.lower(_join_q(), stats=stats, backend="jit")
+    for pipe in plan.pipelines:
+        if isinstance(pipe.output, ShuffleOutput):
+            pipe.output.tier = "kv"
+    res = coord.execute(plan, query_id="brownout")
+    _assert_bit_identical(base.result, res.result)
+    assert res.failure is None
+    assert any("browned out" in ln and "demoted" in ln
+               for ln in res.adaptive_trace), res.adaptive_trace
+    assert coord.kv_store.breaker.failures > 0
+    # Everything this query exchanged ultimately rode the object tier.
+    assert res.exchange_cost_usd["kv"] == 0 or \
+        res.request_stats.reads > 0
+
+
+def test_open_breaker_pins_new_placements_off_kv(fault_store):
+    """Adaptive tier re-placement consults the kv breaker: while the
+    circuit is open, break-even or not, new exchanges go to the object
+    store (and the decision is traced)."""
+    store, tables = fault_store
+    coord = _coord(store, tables, ADAPTIVE, backend="jit")
+    for _ in range(coord.kv_store.breaker.failure_threshold):
+        coord.kv_store.breaker.record_failure(0.0)
+    assert coord.kv_store.breaker.state == "open"
+    res = coord.run(_join_q(), query_id="pinned")
+    assert res.failure is None
+    # No shuffle object may have landed on the kv tier.
+    assert not [k for k in coord.kv_store.list("shuffle/")]
+
+
+# ---------------------------------------------------------------------------
+# Pools: invoke retries, release parity, cold starts, limits, headroom
+# ---------------------------------------------------------------------------
+
+def test_invoke_retry_capped_backoff_then_terminal():
+    # One transient failure: absorbed, backoff surfaced in stats.
+    seed = next(s for s in range(200)
+                if ChaosPolicy(seed=s, invoke_fail_prob=0.5)
+                .invoke_fail(0, 0)
+                and not ChaosPolicy(seed=s, invoke_fail_prob=0.5)
+                .invoke_fail(0, 1))
+    pool = ElasticPool(chaos=ChaosPolicy(seed=seed, invoke_fail_prob=0.5))
+    (w,) = pool.acquire(1, 0.0)
+    assert pool.stats["invoke_faults"] == 1
+    assert pool.stats["invoke_retry_s"] == pytest.approx(0.1)
+    assert w.ready_at >= 0.1
+    # Permanent failure: terminal after the capped schedule, and the
+    # warm fleet is not leaked by the failed acquire.
+    warm = ElasticPool()
+    warm.release(warm.acquire(2, 0.0), 1.0, busy_s=0.5)
+    assert warm.warm_count() == 2
+    warm.chaos = ChaosPolicy(seed=0, invoke_fail_prob=1.0)
+    with pytest.raises(InvokeFailedError):
+        warm.acquire(2, 2.0)
+    assert warm.warm_count() == 2
+    assert warm.stats["invoke_faults"] == warm.invoke_max_attempts
+
+
+def test_release_parity_elastic_vs_provisioned():
+    """Satellite: both pools bill identical worker-seconds for identical
+    work, and the provisioned pool's release records slot occupancy."""
+    ep = ElasticPool()
+    ep.release(ep.acquire(3, 0.0), 4.0, busy_s=2.0)
+    pp = ProvisionedPool(4, boot_s=0.0)
+    ws = pp.acquire(3, 0.0)
+    assert sorted(w.worker_id for w in ws) == [0, 1, 2]   # distinct slots
+    pp.release(ws, 4.0, busy_s=2.0)
+    assert ep.stats["worker_seconds"] == pytest.approx(6.0)
+    assert pp.stats["worker_seconds"] == pytest.approx(6.0)
+    # Occupancy: the next stage queues behind the busy slots instead of
+    # seeing an always-idle fleet.
+    nxt = pp.acquire(4, 0.5)
+    ready = sorted(w.ready_at for w in nxt)
+    assert ready[0] == pytest.approx(0.5)        # the one untouched slot
+    assert all(r >= 2.0 for r in ready[1:])
+
+
+def test_cold_start_jitter_deterministic_per_seed():
+    a = ElasticPool(rng_seed=5).acquire(4, 0.0)
+    b = ElasticPool(rng_seed=5).acquire(4, 0.0)
+    c = ElasticPool(rng_seed=6).acquire(4, 0.0)
+    assert [w.ready_at for w in a] == [w.ready_at for w in b]
+    assert [w.ready_at for w in a] != [w.ready_at for w in c]
+    cs = ColdStartModel()
+    assert cs.cold_s(64 * 1024 * 1024) == pytest.approx(
+        cs.placement_s + 1.0 + cs.init_s)
+
+
+def test_faas_limits_boundaries():
+    limits = FaasLimits(initial_burst=2, scale_per_minute=60,
+                        max_concurrency=8, idle_lifetime_s=10.0)
+    pool = ElasticPool(limits=limits)
+    with pytest.raises(RuntimeError, match="concurrency quota"):
+        pool.acquire(9, 0.0)
+    # Scaling: the burst covers 2 cold starts; per-minute rate after.
+    assert pool._scaling_delay(0.0) == 0.0
+    assert pool._scaling_delay(0.0) == 0.0
+    assert pool._scaling_delay(0.0) == pytest.approx(1.0)
+    assert pool._scaling_delay(0.0) == pytest.approx(2.0)
+    # Idle lifetime: warm sandboxes past the window are reclaimed cold.
+    fresh = ElasticPool(limits=limits)
+    fresh.release(fresh.acquire(2, 0.0), 1.0)
+    assert fresh.warm_count() == 2
+    fresh.acquire(1, 20.0)                       # 20 - 1 > idle_lifetime_s
+    assert fresh.stats["expired"] == 2
+    assert fresh.stats["cold_starts"] == 3
+
+
+def test_speculation_headroom_narrows_dispatch():
+    """Satellite: reserved headroom is held back from first-attempt
+    dispatch, serializing stages that would otherwise co-run."""
+    assert MultiQueryScheduler(ProvisionedPool(8, boot_s=0.0),
+                               budget=8, speculation_headroom=64
+                               ).speculation_headroom == 7
+
+    class _Recording(MultiQueryScheduler):
+        def __init__(self, *a, **k):
+            super().__init__(*a, **k)
+            self.starts = []
+
+        def run_stage(self, stage, t):
+            self.starts.append(t)
+            return super().run_stage(stage, t)
+
+    def stage_starts(headroom):
+        jobs = [QueryJob(job_id=f"j{i}", stages=[Stage(f"s{i}", [
+            Fragment(fragment_id=f, work=lambda: None, est_duration_s=1.0)
+            for f in range(4)])]) for i in range(3)]
+        sched = _Recording(ProvisionedPool(32, boot_s=0.0),
+                           StragglerPolicy(), budget=12, rng_seed=0,
+                           speculation_headroom=headroom)
+        sched.run_jobs(jobs)
+        return sched.starts
+
+    assert stage_starts(0) == [0.0, 0.0, 0.0]     # 12 fragments co-run
+    narrowed = stage_starts(4)                    # cap 8: 2 of 3 co-run
+    assert narrowed[:2] == [0.0, 0.0] and narrowed[2] > 0.0
+
+
+def test_speculative_denied_surfaces_in_pool_stats(fault_store):
+    store, tables = fault_store
+    chaos = ChaosPolicy(seed=2, slow_prob=1.0, slow_mu=1.5, drop_prob=0.0)
+    capped = dataclasses.replace(ADAPTIVE, max_speculative=0)
+    coord = _coord(store, tables, capped, chaos=chaos, mode="provisioned")
+    res = coord.run(_join_q(), query_id="denied")
+    store.chaos = None
+    assert res.speculative_launched == 0
+    assert coord.pool.stats["speculative_denied"] > 0

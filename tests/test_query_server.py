@@ -284,13 +284,13 @@ def test_result_cache_bitmap_validation(serving_store):
                 if e["query_id"] == res.queries[0].query_id]
     qid = entry["query_id"]
     set_keys = []
-    for (_, pipeline, writer), bm in entry["bitmaps"].items():
+    for (_, pipeline, writer), (att, bm) in entry["bitmaps"].items():
         p = 0
         while bm >> p:
             if (bm >> p) & 1:
                 set_keys.append(
                     (pipeline,
-                     worker_mod.shuffle_key(qid, pipeline, writer, p)))
+                     worker_mod.shuffle_key(qid, pipeline, writer, p, att)))
             p += 1
     assert set_keys, "q12 must produce shuffle partitions"
     # Shuffles may ride either exchange tier; delete the partition from
